@@ -1,0 +1,59 @@
+"""Fig. 5b / Fig. 17: surrogate (GP vs RF) x acquisition (EI vs LCB) ablation.
+Fig. 5c / Fig. 18: LCB lambda sweep.
+
+Both on software-mapping optimization for ResNet-K4 (as in the paper)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import SoftwareSpace, bo_maximize
+from repro.timeloop import PAPER_WORKLOADS, eyeriss_168
+
+
+def run_surrogate_acq(n_trials: int = 100, seeds=(0, 1), layer="ResNet-K4"):
+    space = SoftwareSpace(eyeriss_168(), PAPER_WORKLOADS[layer])
+    out = {}
+    for surrogate in ("gp_linear", "rf"):
+        for acq in ("lcb", "ei"):
+            finals = []
+            for seed in seeds:
+                r = bo_maximize(space, n_trials=n_trials,
+                                n_warmup=min(30, n_trials // 4), pool_size=80,
+                                acquisition=acq, lam=1.0,
+                                surrogate=surrogate, seed=seed)
+                finals.append(r.best_value)
+            out[f"{surrogate}+{acq}"] = float(np.mean(finals))
+    return out
+
+
+def run_lambda_sweep(n_trials: int = 100, seeds=(0, 1), layer="ResNet-K4",
+                     lams=(0.1, 0.5, 1.0, 2.0)):
+    space = SoftwareSpace(eyeriss_168(), PAPER_WORKLOADS[layer])
+    out = {}
+    for lam in lams:
+        finals = []
+        for seed in seeds:
+            r = bo_maximize(space, n_trials=n_trials,
+                            n_warmup=min(30, n_trials // 4), pool_size=80,
+                            acquisition="lcb", lam=lam,
+                            surrogate="gp_linear", seed=seed)
+            finals.append(r.best_value)
+        out[lam] = float(np.mean(finals))
+    return out
+
+
+def run(n_trials: int = 100, seeds=(0, 1), quiet: bool = False):
+    sa = run_surrogate_acq(n_trials, seeds)
+    if not quiet:
+        for k, v in sorted(sa.items(), key=lambda kv: -kv[1]):
+            print(f"fig5b,{k},best_utility={v:.4f}")
+    ls = run_lambda_sweep(n_trials, seeds)
+    if not quiet:
+        for lam, v in ls.items():
+            print(f"fig5c,lambda={lam},best_utility={v:.4f}")
+    return {"surrogate_acq": sa, "lambda": ls}
+
+
+if __name__ == "__main__":
+    run()

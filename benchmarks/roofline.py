@@ -1,0 +1,77 @@
+"""Roofline table builder: reads artifacts/dryrun/*.json (produced by
+`python -m repro.launch.dryrun --all [--multi-pod]`) and emits the
+EXPERIMENTS.md tables."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load(tag: str = "singlepod") -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(ART, tag, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def table(tag: str = "singlepod") -> str:
+    rows = [
+        "| arch | shape | mesh | GiB/dev | fits | compute_s | memory_s | "
+        "collective_s | bound | useful | MFU |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in load(tag):
+        if "skipped" in r:
+            rows.append(f"| {r['arch']} | {r['shape']} | - | - | - | - | - | - | "
+                        f"SKIP: {r['skipped']} | - | - |")
+            continue
+        t = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['memory']['total_gib_per_dev']} | "
+            f"{'Y' if r['memory']['fits_16g'] else 'N'} | "
+            f"{t['compute_s']:.3e} | {t['memory_s']:.3e} | "
+            f"{t['collective_s']:.3e} | {t['bound'].replace('_s','')} | "
+            f"{r['useful_flops_ratio']:.2f} | {r['mfu_estimate']:.2%} |")
+    return "\n".join(rows)
+
+
+def summary(tag: str = "singlepod") -> dict:
+    recs = [r for r in load(tag) if "skipped" not in r]
+    if not recs:
+        return {}
+    worst = min(recs, key=lambda r: r["mfu_estimate"])
+    coll = max(recs, key=lambda r: r["roofline"]["collective_s"]
+               / max(r["roofline"]["step_time_s"], 1e-30))
+    return {
+        "cells": len(recs),
+        "all_fit": all(r["memory"]["fits_16g"] for r in recs),
+        "worst_mfu": (worst["arch"], worst["shape"], worst["mfu_estimate"]),
+        "most_collective_bound": (coll["arch"], coll["shape"]),
+    }
+
+
+def run(quiet: bool = False):
+    for tag in ("singlepod", "multipod"):
+        recs = load(tag)
+        if not recs:
+            continue
+        ok = [r for r in recs if "skipped" not in r]
+        sk = [r for r in recs if "skipped" in r]
+        if not quiet:
+            print(f"roofline,{tag},cells={len(ok)},skipped={len(sk)},"
+                  f"all_fit={all(r['memory']['fits_16g'] for r in ok)}")
+    return summary()
+
+
+if __name__ == "__main__":
+    import sys
+    tag = sys.argv[1] if len(sys.argv) > 1 else "singlepod"
+    print(table(tag))
+    print()
+    print(summary(tag))

@@ -1,0 +1,50 @@
+"""Benchmark entry point: one section per paper table/figure plus the roofline
+summary.  Prints `name,metric,...` CSV lines.
+
+    PYTHONPATH=src python -m benchmarks.run            # reduced budgets
+    PYTHONPATH=src python -m benchmarks.run --paper    # paper-scale budgets
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--paper", action="store_true")
+    args, _ = ap.parse_known_args()
+
+    from benchmarks import bo_ablation, bo_codesign, bo_software, roofline
+
+    t0 = time.time()
+    print("# Fig. 3 -- software-mapping optimization (best log10 EDP, lower wins)")
+    bo_software.run(n_trials=250 if args.paper else 100,
+                    seeds=tuple(range(3)) if args.paper else (0, 1))
+
+    print("# feasibility -- raw design-space validity rate (paper: ~0.7%)")
+    for name, ok, n, rate in bo_software.feasibility_report(
+            samples=30_000 if args.paper else 8_000):
+        print(f"feasibility,{name},{ok}/{n},{rate:.4%}")
+
+    print("# Fig. 4 / 5a -- HW/SW co-design vs Eyeriss")
+    if args.paper:
+        bo_codesign.run(n_hw=50, n_sw=250, seeds=(0, 1, 2))
+    else:
+        bo_codesign.run(n_hw=12, n_sw=60, seeds=(0,))
+
+    print("# Fig. 5b/5c -- surrogate/acquisition + lambda ablations")
+    bo_ablation.run(n_trials=250 if args.paper else 80,
+                    seeds=(0, 1, 2) if args.paper else (0, 1))
+
+    print("# Roofline -- dry-run derived terms (see EXPERIMENTS.md for tables)")
+    s = roofline.run()
+    if s:
+        print(f"roofline,summary,{s}")
+
+    print(f"# total {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Full nested HW/SW co-design on the DQN workload (the paper's best case:
+40.2% EDP improvement over Eyeriss).
+
+    PYTHONPATH=src python examples/codesign_dqn.py [--paper]
+"""
+
+import argparse
+
+from repro.core import codesign
+from repro.timeloop import MODEL_LAYERS, eyeriss_baseline_edp
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--paper", action="store_true", help="50 HW x 250 SW trials")
+    args = ap.parse_args()
+
+    layers = MODEL_LAYERS["dqn"]
+    base = eyeriss_baseline_edp(layers, num_pes=168, budget=4000)
+    base_total = sum(base.values())
+    print(f"Eyeriss baseline: model EDP {base_total:.3e}")
+    for k, v in base.items():
+        print(f"  {k}: {v:.3e}")
+
+    kwargs = (dict(n_hw_trials=50, n_sw_trials=250, n_sw_warmup=30,
+                   sw_pool=150, hw_pool=150)
+              if args.paper else
+              dict(n_hw_trials=12, n_sw_trials=60, n_sw_warmup=20,
+                   sw_pool=60, hw_pool=60))
+    res = codesign(layers, num_pes=168, seed=0, verbose=True, **kwargs)
+
+    print(f"\nco-designed: model EDP {res.best_model_edp:.3e} "
+          f"({(1 - res.best_model_edp / base_total) * 100:.1f}% better than Eyeriss)")
+    hw = res.best_hw
+    print(f"best hardware: PE array {hw.pe_mesh_x}x{hw.pe_mesh_y}, "
+          f"LB split I/W/O = {hw.lb_input}/{hw.lb_weight}/{hw.lb_output}, "
+          f"GB {hw.gb_instances} instance(s) "
+          f"({hw.gb_mesh_x}x{hw.gb_mesh_y}, block {hw.gb_block}, "
+          f"cluster {hw.gb_cluster}), dataflow fw={hw.df_fw} fh={hw.df_fh}")
+    for name, edp in res.layer_edps.items():
+        print(f"  {name}: {edp:.3e}  (eyeriss {base[name]:.3e})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""SeamlessM4T-large-v2 [arXiv:2308.11596]: encoder-decoder multimodal backbone.
+
+The modality frontend (speech encoder frontend) is a STUB per the assignment:
+`input_specs()` supplies precomputed frame embeddings (B, S_src, d_model) to the
+text/unit encoder-decoder backbone implemented here (24 enc + 24 dec layers).
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-large-v2",
+    family="encdec",
+    num_layers=24,           # decoder layers
+    encoder_layers=24,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=8192,
+    vocab_size=256206,       # padded to a shardable multiple internally
+    input_mode="embeddings",
+    rope=False,              # learned/sinusoidal positions in the original; we
+                             # use rope=False -> additive positional embedding
+)
+
+SMOKE_CONFIG = ModelConfig(
+    name="seamless-smoke",
+    family="encdec",
+    num_layers=2,
+    encoder_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=128,
+    vocab_size=256,
+    input_mode="embeddings",
+    rope=False,
+)

@@ -1,0 +1,31 @@
+"""The paper's contribution: nested constrained Bayesian optimization for
+hardware/software co-design, plus the beyond-paper TPU sharding autotuner."""
+
+from repro.core.gp import GP, GPClassifier
+from repro.core.acquisition import expected_improvement, lcb, make_acquisition
+from repro.core.bo import BOResult, bo_maximize
+from repro.core.swspace import SoftwareSpace
+from repro.core.hwspace import HardwareSpace
+from repro.core.nested import CoDesignResult, codesign, optimize_software
+from repro.core.baselines import random_search, relax_round_bo, tvm_style_search
+from repro.core.trees import GradientBoostedTrees, RandomForestSurrogate
+
+__all__ = [
+    "GP",
+    "GPClassifier",
+    "expected_improvement",
+    "lcb",
+    "make_acquisition",
+    "BOResult",
+    "bo_maximize",
+    "SoftwareSpace",
+    "HardwareSpace",
+    "CoDesignResult",
+    "codesign",
+    "optimize_software",
+    "random_search",
+    "relax_round_bo",
+    "tvm_style_search",
+    "GradientBoostedTrees",
+    "RandomForestSurrogate",
+]

@@ -1,0 +1,39 @@
+"""Acquisition functions (paper §3.3) in the *maximization* convention.
+
+The optimizer maximizes utility = normalized reciprocal EDP (equivalently we fit
+the GP on -log EDP).  LCB here follows the paper's formula a = mu + lambda*sigma
+(an upper bound in maximize convention; the paper keeps the LCB name).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def _norm_pdf(z):
+    return np.exp(-0.5 * z * z) / np.sqrt(2.0 * np.pi)
+
+
+def _norm_cdf(z):
+    from math import erf
+
+    z = np.asarray(z, dtype=np.float64)
+    return 0.5 * (1.0 + np.vectorize(erf)(z))
+
+
+def expected_improvement(mu: np.ndarray, var: np.ndarray, best: float) -> np.ndarray:
+    sigma = np.sqrt(var)
+    z = (mu - best) / np.maximum(sigma, 1e-12)
+    return (mu - best) * _norm_cdf(z) + sigma * _norm_pdf(z)
+
+
+def lcb(mu: np.ndarray, var: np.ndarray, lam: float = 1.0) -> np.ndarray:
+    return mu + lam * np.sqrt(var)
+
+
+def make_acquisition(name: str, lam: float = 1.0):
+    if name == "ei":
+        return lambda mu, var, best: expected_improvement(mu, var, best)
+    if name == "lcb":
+        return lambda mu, var, best: lcb(mu, var, lam)
+    raise ValueError(name)

@@ -1,0 +1,118 @@
+"""Beyond-paper: the paper's constrained-BO engine retargeted at THIS
+framework's own performance knobs (sharding layout, mesh split, remat,
+flash-attention block sizes).
+
+The black box is `lower().compile()` + roofline analysis (minutes per sample on
+this container -- genuinely expensive, like the paper's simulator), the
+objective is estimated step time (the EDP analogue: we minimize time at fixed
+hardware, i.e. the delay term), known constraints (divisibility, axis fit) are
+input constraints, and compile failures / OOM are unknown constraints handled
+by the GP classifier.  See EXPERIMENTS.md §Perf for results.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.parallel.sharding import AxisRules
+
+_MESH_SPLITS = [(64, 4), (32, 8), (16, 16), (8, 32), (4, 64)]
+_BLOCKS = [256, 512, 1024, 2048]
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneConfig:
+    mesh_data: int = 16
+    mesh_model: int = 16
+    fsdp: bool = True
+    remat: str = "block"          # "none" | "block"
+    flash_bq: int = 1024
+    flash_bk: int = 1024
+
+    def rules(self) -> AxisRules:
+        return AxisRules(fsdp="data" if self.fsdp else None)
+
+
+@dataclasses.dataclass
+class TuneSpace:
+    """Constrained search space over TuneConfig for one (cfg, shape) cell."""
+
+    cfg: ModelConfig
+    shape: ShapeConfig
+    total_chips: int = 256
+    name: str = "autotune"
+
+    feature_dim: int = 7
+
+    def sample(self, rng) -> TuneConfig:
+        d, m = _MESH_SPLITS[rng.integers(len(_MESH_SPLITS))]
+        return TuneConfig(
+            mesh_data=d,
+            mesh_model=m,
+            fsdp=bool(rng.integers(2)),
+            remat="block" if rng.integers(2) else "none",
+            flash_bq=int(_BLOCKS[rng.integers(len(_BLOCKS))]),
+            flash_bk=int(_BLOCKS[rng.integers(len(_BLOCKS))]),
+        )
+
+    def is_valid(self, t: TuneConfig) -> bool:
+        # Known input constraints: mesh must multiply out; batch divisible by
+        # the data axis; TP dims divisible by the model axis; flash blocks
+        # cannot exceed the sequence.
+        if t.mesh_data * t.mesh_model != self.total_chips:
+            return False
+        if self.shape.global_batch % t.mesh_data:
+            return False
+        for dim in (self.cfg.d_model, self.cfg.d_ff or self.cfg.d_model):
+            if dim % t.mesh_model:
+                return False
+        if t.flash_bq > self.shape.seq_len or t.flash_bk > self.shape.seq_len:
+            return False
+        return True
+
+    def features(self, t: TuneConfig) -> np.ndarray:
+        return np.array([
+            np.log2(t.mesh_data),
+            np.log2(t.mesh_model),
+            float(t.fsdp),
+            1.0 if t.remat == "block" else 0.0,
+            np.log2(t.flash_bq),
+            np.log2(t.flash_bk),
+            np.log2(t.mesh_data) - np.log2(max(t.mesh_model, 1)),
+        ], np.float64)
+
+    def evaluate(self, t: TuneConfig) -> tuple[float | None, bool]:
+        import jax
+        from repro.launch import dryrun as DR
+
+        cfg = dataclasses.replace(
+            self.cfg, remat=t.remat, flash_block_q=t.flash_bq,
+            flash_block_k=t.flash_bk)
+        mesh = jax.make_mesh(
+            (t.mesh_data, t.mesh_model), ("data", "model"),
+            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        try:
+            lowered = DR.lower_cell(cfg, self.shape, mesh, t.rules())
+            rec = DR.analyze(lowered, cfg, self.shape, mesh, t.rules())
+        except Exception:
+            return None, False      # unknown constraint: compile failure
+        if not rec["memory"]["fits_16g"]:
+            return None, False      # unknown constraint: exceeds HBM
+        step = rec["roofline"]["step_time_s"]
+        self.last_record = rec
+        return -float(np.log10(step)), True
+
+
+def autotune(cfg: ModelConfig, shape: ShapeConfig, n_trials: int = 12,
+             n_warmup: int = 4, pool_size: int = 32, seed: int = 0):
+    """Run constrained BO over the tune space; returns (best TuneConfig, BOResult)."""
+    from repro.core.bo import bo_maximize
+
+    space = TuneSpace(cfg, shape)
+    result = bo_maximize(space, n_trials=n_trials, n_warmup=n_warmup,
+                         pool_size=pool_size, acquisition="lcb", lam=1.0,
+                         surrogate="gp_linear", noisy=False, seed=seed)
+    return result.best_point, result

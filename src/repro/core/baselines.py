@@ -1,0 +1,183 @@
+"""Search baselines from the paper's evaluation (§5.1 Baselines).
+
+* constrained random search -- "repeatedly takes the first random sample in the
+  design space that satisfies the constraints".
+* relax-and-round BO        -- out-of-the-box BO in a continuous unit cube,
+  rounded to the nearest valid discrete design point.
+* TVM-style learned search  -- a gradient-boosted-trees cost model (XGBoost
+  analogue) trained online, with epsilon-greedy batched candidate selection,
+  mirroring Chen et al. (2018).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.bo import BOResult
+from repro.core.gp import GP
+from repro.core.trees import GradientBoostedTrees
+from repro.timeloop.mapping import LEVELS, Mapping, _prod
+from repro.timeloop.workloads import DIMS, divisors
+
+
+def random_search(space, n_trials: int = 250, seed: int = 0) -> BOResult:
+    rng = np.random.default_rng(seed)
+    result = BOResult(None, -np.inf, [], [], [])
+    for _ in range(n_trials):
+        p = space.sample(rng)
+        for _ in range(100_000):  # first sample satisfying the known constraints
+            if space.is_valid(p):
+                break
+            p = space.sample(rng)
+        value, feasible = space.evaluate(p)
+        result.points.append(p)
+        if feasible and value > result.best_value:
+            result.best_value, result.best_point = value, p
+        result.values.append(value if feasible else -np.inf)
+        if not feasible:
+            result.n_infeasible += 1
+        result.history.append(result.best_value)
+    return result
+
+
+def tvm_style_search(
+    space, n_trials: int = 250, n_warmup: int = 30, pool_size: int = 150,
+    epsilon: float = 0.1, seed: int = 0,
+) -> BOResult:
+    """Learned-cost-model search: GBT regressor ranks a candidate pool; with
+    probability epsilon explore randomly (TVM's exploration knob)."""
+    rng = np.random.default_rng(seed)
+    result = BOResult(None, -np.inf, [], [], [])
+    X, y = [], []
+
+    def observe(p):
+        value, feasible = space.evaluate(p)
+        result.points.append(p)
+        if feasible:
+            X.append(space.features(p))
+            y.append(value)
+            if value > result.best_value:
+                result.best_value, result.best_point = value, p
+            result.values.append(value)
+        else:
+            result.n_infeasible += 1
+            result.values.append(-np.inf)
+        result.history.append(result.best_value)
+
+    def sample_valid():
+        while True:
+            p = space.sample(rng)
+            if space.is_valid(p):
+                return p
+
+    for _ in range(min(n_warmup, n_trials)):
+        observe(sample_valid())
+    model = None
+    for t in range(len(result.history), n_trials):
+        if len(y) >= 4:
+            model = GradientBoostedTrees(seed=seed).fit(np.stack(X), np.asarray(y))
+        if model is None or rng.random() < epsilon:
+            observe(sample_valid())
+            continue
+        pool = [sample_valid() for _ in range(pool_size)]
+        preds = model.predict(np.stack([space.features(p) for p in pool]))
+        observe(pool[int(np.argmax(preds))])
+    return result
+
+
+# --- relax-and-round BO ------------------------------------------------------
+
+
+def _round_mapping(u: np.ndarray, space) -> Mapping:
+    """Decode a continuous point in [0,1]^D to the nearest *valid* mapping
+    (the paper's relax-and-round baseline): each dim's factor chain is picked
+    by rounding into the capacity-admissible divisor lists (nearest-valid
+    repair); loop orders come from argsorting continuous keys."""
+    layer, hw = space.layer, space.hw
+    idx = 0
+    per_level = {lvl: [1] * len(DIMS) for lvl in LEVELS}
+
+    def lb_ok(fl):
+        r, s, p, q, c, k = fl
+        return (r * s * c * k <= hw.lb_weight
+                and layer.input_extent(p, r) * layer.input_extent(q, s) * c <= hw.lb_input
+                and p * q * k <= hw.lb_output)
+
+    for di, d in enumerate(DIMS):
+        rem = layer.dim(d)
+        for lvl in ("lb", "sx", "sy", "gb"):
+            ds = divisors(rem)
+            if lvl == "lb":
+                cands = []
+                for f in ds:
+                    trial = list(per_level["lb"])
+                    trial[di] = f
+                    if lb_ok(trial):
+                        cands.append(f)
+                ds = cands or [1]
+            elif lvl == "sx":
+                cap = hw.pe_mesh_x // _prod(per_level["sx"])
+                ds = [f for f in ds if f <= cap] or [1]
+            elif lvl == "sy":
+                cap = hw.pe_mesh_y // _prod(per_level["sy"])
+                ds = [f for f in ds if f <= cap] or [1]
+            f = ds[min(int(u[idx] * len(ds)), len(ds) - 1)]
+            per_level[lvl][di] = f
+            rem //= f
+            idx += 1
+        per_level["dram"][di] = rem
+    orders = []
+    for _ in range(3):
+        keys = u[idx : idx + len(DIMS)]
+        orders.append(tuple(DIMS[i] for i in np.argsort(keys)))
+        idx += len(DIMS)
+    return Mapping(
+        factors=tuple(tuple(per_level[lvl]) for lvl in LEVELS),
+        order_lb=orders[0],
+        order_gb=orders[1],
+        order_dram=orders[2],
+    )
+
+
+def relax_round_bo(
+    space, n_trials: int = 250, n_warmup: int = 30, pool_size: int = 150,
+    lam: float = 1.0, seed: int = 0,
+) -> BOResult:
+    """Out-of-the-box BO baseline: SE-kernel GP over the continuous relaxation,
+    LCB acquisition over a random continuous pool, round to valid parameters.
+    Infeasible rounded points score a large penalty (the standard treatment)."""
+    rng = np.random.default_rng(seed)
+    dim = 4 * len(DIMS) + 3 * len(DIMS)
+    result = BOResult(None, -np.inf, [], [], [])
+    U, y = [], []
+    PENALTY = None
+
+    def observe(u):
+        nonlocal PENALTY
+        m = _round_mapping(u, space)
+        value, feasible = space.evaluate(m)
+        result.points.append(m)
+        if feasible:
+            if value > result.best_value:
+                result.best_value, result.best_point = value, m
+            result.values.append(value)
+            if PENALTY is None or value - 2.0 < PENALTY:
+                PENALTY = value - 2.0
+        else:
+            result.n_infeasible += 1
+            result.values.append(-np.inf)
+        U.append(u)
+        y.append(value if feasible else np.nan)
+        result.history.append(result.best_value)
+
+    for _ in range(min(n_warmup, n_trials)):
+        observe(rng.random(dim))
+    for _ in range(len(result.history), n_trials):
+        yy = np.asarray(y, dtype=np.float64)
+        fill = PENALTY if PENALTY is not None else -20.0
+        yy = np.where(np.isnan(yy), fill, yy)
+        gp = GP(kind="se", noisy=True).fit(np.stack(U), yy)
+        pool = rng.random((pool_size, dim))
+        mu, var = gp.posterior(pool)
+        observe(pool[int(np.argmax(mu + lam * np.sqrt(var)))])
+    return result

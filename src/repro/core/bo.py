@@ -1,0 +1,129 @@
+"""Generic constrained Bayesian optimization loop (paper §3, §4).
+
+The loop implements the paper's scheme exactly:
+  * warmup with random feasible samples (5 HW / 30 SW in the paper),
+  * fit the objective surrogate on feasible observations (linear kernel on
+    engineered features; noise kernel only when the evaluator is noisy),
+  * if any *output*-infeasible points have been observed, fit the SE-kernel GP
+    classifier and weight the acquisition by P(C(x)) (Gelbart et al. 2014),
+  * optimize the acquisition by rejection sampling: pool `pool_size` candidates
+    that satisfy all input constraints, pick the acquisition argmax,
+  * evaluate, record, repeat for `n_trials`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import numpy as np
+
+from repro.core.acquisition import make_acquisition
+from repro.core.gp import GP, GPClassifier
+from repro.core.trees import RandomForestSurrogate
+
+
+class InfeasibleSpace(RuntimeError):
+    """Raised when input-constraint rejection sampling cannot find any valid
+    point -- the search space itself is (empirically) empty.  At the hardware
+    level this is the paper's *unknown constraint*."""
+
+
+@dataclasses.dataclass
+class BOResult:
+    best_point: Any
+    best_value: float                 # utility (maximized): -log10(EDP)
+    history: list[float]              # best-so-far utility per trial
+    values: list[float]               # raw utility per trial (-inf if infeasible)
+    points: list[Any]
+    n_infeasible: int = 0
+
+
+def bo_maximize(
+    space,
+    n_trials: int = 250,
+    n_warmup: int = 30,
+    pool_size: int = 150,
+    acquisition: str = "lcb",
+    lam: float = 1.0,
+    surrogate: str = "gp_linear",
+    noisy: bool = False,
+    seed: int = 0,
+    gp_refit_every: int = 1,
+    callback: Callable[[int, BOResult], None] | None = None,
+) -> BOResult:
+    rng = np.random.default_rng(seed)
+    acq = make_acquisition(acquisition, lam)
+
+    X_feas: list[np.ndarray] = []
+    y_feas: list[float] = []
+    X_all: list[np.ndarray] = []
+    feas_all: list[bool] = []
+    result = BOResult(None, -np.inf, [], [], [])
+
+    def observe(point):
+        feats = space.features(point)
+        value, feasible = space.evaluate(point)
+        X_all.append(feats)
+        feas_all.append(feasible)
+        result.points.append(point)
+        if feasible:
+            X_feas.append(feats)
+            y_feas.append(value)
+            if value > result.best_value:
+                result.best_value, result.best_point = value, point
+            result.values.append(value)
+        else:
+            result.n_infeasible += 1
+            result.values.append(-np.inf)
+        result.history.append(result.best_value)
+
+    def sample_valid(max_attempts: int = 20_000):
+        """Rejection sampling against the *known* input constraints (paper §3.4):
+        invalid draws are rejected before any evaluation."""
+        for _ in range(max_attempts):
+            p = space.sample(rng)
+            if space.is_valid(p):
+                return p
+        raise InfeasibleSpace(getattr(space, "name", "space"))
+
+    # --- warmup ---------------------------------------------------------------
+    for _ in range(min(n_warmup, n_trials)):
+        observe(sample_valid())
+
+    model = None
+    classifier = None
+    for t in range(len(result.history), n_trials):
+        if len(y_feas) >= 2 and (model is None or t % gp_refit_every == 0):
+            Xf = np.stack(X_feas)
+            yf = np.asarray(y_feas)
+            if surrogate == "gp_linear":
+                model = GP(kind="linear", noisy=noisy).fit(Xf, yf)
+            elif surrogate == "gp_se":
+                model = GP(kind="se", noisy=noisy).fit(Xf, yf)
+            elif surrogate == "rf":
+                model = RandomForestSurrogate(seed=seed + t).fit(Xf, yf)
+            else:
+                raise ValueError(surrogate)
+            if any(not f for f in feas_all):
+                classifier = GPClassifier().fit(np.stack(X_all), np.asarray(feas_all))
+            else:
+                classifier = None
+
+        if model is None:  # not enough feasible data yet -> keep sampling
+            observe(sample_valid())
+            if callback:
+                callback(t, result)
+            continue
+
+        pool = [sample_valid() for _ in range(pool_size)]
+        feats = np.stack([space.features(p) for p in pool])
+        mu, var = model.posterior(feats)
+        utility = acq(mu, var, result.best_value)
+        if classifier is not None:
+            utility = utility * classifier.prob_feasible(feats)
+        observe(pool[int(np.argmax(utility))])
+        if callback:
+            callback(t, result)
+
+    return result

@@ -1,0 +1,178 @@
+"""Exact Gaussian processes in JAX (paper §3.2).
+
+Kernels: squared-exponential (ARD optional), linear-on-features, and an additive
+noise kernel.  Hyperparameters live in log space and are fit by full-batch Adam
+on the negative marginal log-likelihood.  Dataset sizes here are tiny (<= a few
+hundred), so exact Cholesky GPs are cheap; to keep the jitted fit fast on CPU we
+pad X/y to bucketed sizes (powers of two) with masked-out rows so the compiled
+function is reused across BO iterations.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+jax.config.update("jax_enable_x64", True)
+
+_JITTER = 1e-6
+_PAD_NOISE = 1e6  # effective infinite noise on padded rows -> zero influence
+
+
+def _bucket(n: int) -> int:
+    b = 8
+    while b < n:
+        b *= 2
+    return b
+
+
+def se_kernel(params, x1, x2):
+    """Squared exponential with scalar lengthscale (paper's constraint GP)."""
+    alpha = jnp.exp(params["log_alpha"])
+    ell = jnp.exp(params["log_ell"])
+    d2 = jnp.sum((x1[:, None, :] - x2[None, :, :]) ** 2, axis=-1)
+    return alpha**2 * jnp.exp(-d2 / (ell**2))
+
+
+def linear_kernel(params, x1, x2):
+    """Linear kernel on explicit features with learned per-feature scales
+    (paper §3.2: "a linear kernel on top of explicit features")."""
+    w = jnp.exp(params["log_w"])
+    return (x1 * w) @ (x2 * w).T + jnp.exp(params["log_bias"]) ** 2
+
+
+KERNELS = {"se": se_kernel, "linear": linear_kernel}
+
+
+def _init_params(kind: str, dim: int) -> dict:
+    if kind == "se":
+        return {"log_alpha": jnp.zeros(()), "log_ell": jnp.zeros(())}
+    if kind == "linear":
+        return {"log_w": jnp.zeros((dim,)), "log_bias": jnp.zeros(())}
+    raise ValueError(kind)
+
+
+@functools.partial(jax.jit, static_argnames=("kind",))
+def _nll(params, X, y, mask, kind):
+    k = KERNELS[kind]
+    n = X.shape[0]
+    noise = jnp.exp(2.0 * params["log_tau"])
+    diag = jnp.where(mask > 0.5, noise + _JITTER, _PAD_NOISE)
+    K = k(params, X, X) * (mask[:, None] * mask[None, :]) + jnp.diag(diag)
+    c = params["mean_const"]
+    r = jnp.where(mask > 0.5, y - c, 0.0)
+    L = jnp.linalg.cholesky(K)
+    alpha = jax.scipy.linalg.cho_solve((L, True), r)
+    quad = r @ alpha
+    logdet = 2.0 * jnp.sum(jnp.where(mask > 0.5, jnp.log(jnp.diagonal(L)), 0.0))
+    n_eff = jnp.sum(mask)
+    return 0.5 * (quad + logdet + n_eff * jnp.log(2.0 * jnp.pi))
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "steps", "lr"))
+def _fit(params, X, y, mask, kind, steps=80, lr=0.05):
+    grad_fn = jax.grad(_nll)
+
+    def adam_step(carry, _):
+        p, m, v, t = carry
+        g = grad_fn(p, X, y, mask, kind)
+        t = t + 1
+        m = jax.tree.map(lambda a, b: 0.9 * a + 0.1 * b, m, g)
+        v = jax.tree.map(lambda a, b: 0.999 * a + 0.001 * b * b, v, g)
+        mh = jax.tree.map(lambda a: a / (1 - 0.9**t), m)
+        vh = jax.tree.map(lambda a: a / (1 - 0.999**t), v)
+        p = jax.tree.map(lambda a, b, c: a - lr * b / (jnp.sqrt(c) + 1e-8), p, mh, vh)
+        return (p, m, v, t), None
+
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    (params, _, _, _), _ = jax.lax.scan(
+        adam_step, (params, zeros, zeros, 0.0), None, length=steps
+    )
+    return params
+
+
+@functools.partial(jax.jit, static_argnames=("kind",))
+def _posterior(params, X, y, mask, Xs, kind):
+    k = KERNELS[kind]
+    noise = jnp.exp(2.0 * params["log_tau"])
+    diag = jnp.where(mask > 0.5, noise + _JITTER, _PAD_NOISE)
+    K = k(params, X, X) * (mask[:, None] * mask[None, :]) + jnp.diag(diag)
+    c = params["mean_const"]
+    r = jnp.where(mask > 0.5, y - c, 0.0)
+    L = jnp.linalg.cholesky(K)
+    alpha = jax.scipy.linalg.cho_solve((L, True), r)
+    Ks = k(params, Xs, X) * mask[None, :]
+    mu = Ks @ alpha + c
+    v = jax.scipy.linalg.solve_triangular(L, Ks.T, lower=True)
+    kss = jax.vmap(lambda x: k(params, x[None], x[None])[0, 0])(Xs)
+    var = jnp.maximum(kss - jnp.sum(v**2, axis=0), 1e-10)
+    return mu, var
+
+
+@dataclasses.dataclass
+class GP:
+    """Exact GP regressor.
+
+    kind:        'se' or 'linear'
+    noisy:       if False, the noise is pinned tiny (deterministic evaluator,
+                 paper §4.3); if True it is a learned hyperparameter (paper §4.2).
+    """
+
+    kind: str = "linear"
+    noisy: bool = True
+    steps: int = 80
+    _state: tuple | None = None
+
+    def fit(self, X: np.ndarray, y: np.ndarray) -> "GP":
+        X = np.asarray(X, np.float64)
+        y = np.asarray(y, np.float64)
+        n, d = X.shape
+        b = _bucket(n)
+        Xp = np.zeros((b, d))
+        yp = np.zeros((b,))
+        mask = np.zeros((b,))
+        Xp[:n], yp[:n], mask[:n] = X, y, 1.0
+        params = _init_params(self.kind, d)
+        params["mean_const"] = jnp.asarray(float(y.mean()))
+        params["log_tau"] = jnp.asarray(np.log(max(y.std(), 1e-3) * 0.1) if self.noisy else -6.0)
+        params = _fit(params, jnp.asarray(Xp), jnp.asarray(yp), jnp.asarray(mask), self.kind, self.steps)
+        if not self.noisy:
+            params["log_tau"] = jnp.asarray(-6.0)
+        self._state = (params, jnp.asarray(Xp), jnp.asarray(yp), jnp.asarray(mask))
+        return self
+
+    def posterior(self, Xs: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        assert self._state is not None, "fit() first"
+        params, Xp, yp, mask = self._state
+        mu, var = _posterior(params, Xp, yp, mask, jnp.asarray(Xs, jnp.float64), self.kind)
+        return np.asarray(mu), np.asarray(var)
+
+    @property
+    def params(self):
+        return self._state[0] if self._state else None
+
+
+@dataclasses.dataclass
+class GPClassifier:
+    """GP "classifier" for unknown (output) constraints (paper §3.4): GP
+    regression on +/-1 labels with a probit link on the latent posterior --
+    the standard cheap approximation used in constrained BO."""
+
+    steps: int = 80
+    _gp: GP | None = None
+
+    def fit(self, X: np.ndarray, feasible: np.ndarray) -> "GPClassifier":
+        y = np.where(np.asarray(feasible), 1.0, -1.0)
+        self._gp = GP(kind="se", noisy=True, steps=self.steps).fit(X, y)
+        return self
+
+    def prob_feasible(self, Xs: np.ndarray) -> np.ndarray:
+        if self._gp is None:
+            return np.ones(len(Xs))
+        mu, var = self._gp.posterior(Xs)
+        z = mu / np.sqrt(1.0 + var)
+        return 0.5 * (1.0 + jax.scipy.special.erf(z / np.sqrt(2.0)))

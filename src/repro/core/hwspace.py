@@ -1,0 +1,76 @@
+"""Hardware search space (paper §4.2).
+
+Known constraints (mesh products, storage budget) are input constraints enforced
+at sampling time; the *unknown* constraint -- "does a feasible software mapping
+exist / can the inner optimizer find one" -- surfaces through evaluate() and is
+modeled by the SE-kernel GP classifier in the BO loop.  Hardware evaluation is
+noisy (the inner SW search is stochastic), so the objective GP keeps a learned
+noise kernel.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+from repro.timeloop.arch import HardwareConfig, hw_is_valid, sample_hardware
+
+HW_FEATURE_NAMES = (
+    "mesh_x_ratio",       # PE mesh-X / GB mesh-X  (Fig. 13)
+    "mesh_y_ratio",       # PE mesh-Y / GB mesh-Y  (Fig. 13)
+    "log_pe_mesh_x",
+    "log_pe_mesh_y",
+    "lb_input_frac",
+    "lb_weight_frac",
+    "lb_output_frac",
+    "log_gb_instances",
+    "log_gb_bandwidth",
+    "df_fw",
+    "df_fh",
+)
+
+
+@dataclasses.dataclass
+class HardwareSpace:
+    num_pes: int = 168
+    base: HardwareConfig | None = None
+    # evaluate_fn(hw) -> (utility | None, feasible); injected by the nested driver.
+    evaluate_fn: Callable[[HardwareConfig], tuple[float | None, bool]] | None = None
+    name: str = "hardware"
+
+    @property
+    def feature_dim(self) -> int:
+        return len(HW_FEATURE_NAMES)
+
+    def sample(self, rng) -> HardwareConfig:
+        while True:
+            hw = sample_hardware(rng, num_pes=self.num_pes, base=self.base)
+            if hw_is_valid(hw)[0]:
+                return hw
+
+    def is_valid(self, hw: HardwareConfig) -> bool:
+        return hw_is_valid(hw)[0]
+
+    def features(self, hw: HardwareConfig) -> np.ndarray:
+        return np.array(
+            [
+                hw.pe_mesh_x / hw.gb_mesh_x,
+                hw.pe_mesh_y / hw.gb_mesh_y,
+                np.log1p(hw.pe_mesh_x),
+                np.log1p(hw.pe_mesh_y),
+                hw.lb_input / hw.lb_budget,
+                hw.lb_weight / hw.lb_budget,
+                hw.lb_output / hw.lb_budget,
+                np.log1p(hw.gb_instances),
+                np.log1p(hw.gb_bandwidth),
+                float(hw.df_fw - 1),
+                float(hw.df_fh - 1),
+            ],
+            dtype=np.float64,
+        )
+
+    def evaluate(self, hw: HardwareConfig) -> tuple[float | None, bool]:
+        assert self.evaluate_fn is not None, "inject evaluate_fn (nested driver)"
+        return self.evaluate_fn(hw)

@@ -1,0 +1,128 @@
+"""Nested hardware/software co-design (paper §4.1, Fig. 1).
+
+Outer loop: constrained BO over hardware configurations (50 trials in the paper).
+Inner loop: for each candidate hardware, per-layer constrained BO over software
+mappings (250 trials in the paper); layer-wise EDPs are summed into the model
+EDP that the hardware optimizer sees.  The hardware objective is noisy (the
+inner search is stochastic) -> noise kernel on; a hardware point with no
+discoverable mapping for some layer is an *unknown-constraint* violation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.bo import BOResult, InfeasibleSpace, bo_maximize
+from repro.core.hwspace import HardwareSpace
+from repro.core.swspace import SoftwareSpace
+from repro.timeloop.arch import HardwareConfig
+from repro.timeloop.mapping import Mapping
+from repro.timeloop.model import evaluate
+from repro.timeloop.workloads import ConvLayer
+
+
+@dataclasses.dataclass
+class CoDesignResult:
+    best_hw: HardwareConfig
+    best_mappings: dict[str, Mapping]
+    best_model_edp: float            # sum over layers, pJ*cycles
+    hw_result: BOResult
+    layer_edps: dict[str, float]
+
+
+def optimize_software(
+    hw: HardwareConfig,
+    layer: ConvLayer,
+    n_trials: int = 250,
+    n_warmup: int = 30,
+    pool_size: int = 150,
+    acquisition: str = "lcb",
+    lam: float = 1.0,
+    surrogate: str = "gp_linear",
+    seed: int = 0,
+) -> BOResult:
+    space = SoftwareSpace(hw, layer)
+    try:
+        return bo_maximize(
+            space,
+            n_trials=n_trials,
+            n_warmup=n_warmup,
+            pool_size=pool_size,
+            acquisition=acquisition,
+            lam=lam,
+            surrogate=surrogate,
+            noisy=False,  # deterministic evaluator (paper §4.3)
+            seed=seed,
+        )
+    except InfeasibleSpace:
+        # No feasible mapping could even be sampled -> report an empty result;
+        # the hardware level treats this as an unknown-constraint violation.
+        return BOResult(None, -np.inf, [], [], [])
+
+
+def codesign(
+    layers: Sequence[ConvLayer],
+    num_pes: int = 168,
+    n_hw_trials: int = 50,
+    n_sw_trials: int = 250,
+    n_hw_warmup: int = 5,
+    n_sw_warmup: int = 30,
+    sw_pool: int = 150,
+    hw_pool: int = 150,
+    acquisition: str = "lcb",
+    lam: float = 1.0,
+    surrogate: str = "gp_linear",
+    seed: int = 0,
+    verbose: bool = False,
+) -> CoDesignResult:
+    inner_seed = [seed * 7919]
+    best = {"edp": np.inf, "hw": None, "maps": None, "per_layer": None}
+
+    def eval_hw(hw: HardwareConfig):
+        inner_seed[0] += 1
+        total_edp = 0.0
+        maps: dict[str, Mapping] = {}
+        per_layer: dict[str, float] = {}
+        for layer in layers:
+            r = optimize_software(
+                hw, layer,
+                n_trials=n_sw_trials, n_warmup=n_sw_warmup, pool_size=sw_pool,
+                acquisition=acquisition, lam=lam, surrogate=surrogate,
+                seed=inner_seed[0],
+            )
+            if r.best_point is None:
+                return None, False  # unknown constraint: no feasible mapping found
+            ev = evaluate(hw, r.best_point, layer)
+            total_edp += ev.edp
+            maps[layer.name] = r.best_point
+            per_layer[layer.name] = ev.edp
+        if total_edp < best["edp"]:
+            best.update(edp=total_edp, hw=hw, maps=maps, per_layer=per_layer)
+        if verbose:
+            print(f"  hw {hw.pe_mesh_x}x{hw.pe_mesh_y} "
+                  f"lb=({hw.lb_input},{hw.lb_weight},{hw.lb_output}) "
+                  f"-> model EDP {total_edp:.3e}")
+        return -float(np.log10(total_edp)), True
+
+    space = HardwareSpace(num_pes=num_pes, evaluate_fn=eval_hw)
+    hw_result = bo_maximize(
+        space,
+        n_trials=n_hw_trials,
+        n_warmup=n_hw_warmup,
+        pool_size=hw_pool,
+        acquisition=acquisition,
+        lam=lam,
+        surrogate=surrogate,
+        noisy=True,  # inner search stochasticity (paper §4.2)
+        seed=seed,
+    )
+    return CoDesignResult(
+        best_hw=best["hw"],
+        best_mappings=best["maps"],
+        best_model_edp=best["edp"],
+        hw_result=hw_result,
+        layer_edps=best["per_layer"],
+    )

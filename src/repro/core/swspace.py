@@ -1,0 +1,91 @@
+"""Software-mapping search space for one (hardware, layer) pair (paper §4.3).
+
+All constraints are *known* here (hardware and layer are fixed), so the sampler
+enforces them as input constraints; the evaluator is deterministic, so the GP
+uses no noise kernel.  Features follow Fig. 13 plus order-sensitive log trip
+counts, which give the linear kernel direct visibility into the reuse structure.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.timeloop.arch import HardwareConfig
+from repro.timeloop.mapping import (
+    Mapping,
+    constrained_random_mapping,
+    gb_tiles,
+    lb_tiles,
+    mapping_is_valid,
+)
+from repro.timeloop.model import _level_trips, evaluate
+from repro.timeloop.workloads import DIMS, RELEVANCE, ConvLayer
+
+FEATURE_NAMES = (
+    "input_buffer_usage",
+    "weight_buffer_usage",
+    "output_buffer_usage",
+    "global_buffer_usage",
+    "parallelism_ratio_x",
+    "parallelism_ratio_y",
+    "log_trips_W_gb",
+    "log_trips_I_gb",
+    "log_trips_O_gb",
+    "log_trips_W_dram",
+    "log_trips_I_dram",
+    "log_trips_O_dram",
+    "log_used_pes",
+    "log_macs_per_pe",
+)
+
+
+@dataclasses.dataclass
+class SoftwareSpace:
+    hw: HardwareConfig
+    layer: ConvLayer
+    name: str = "software"
+
+    @property
+    def feature_dim(self) -> int:
+        return len(FEATURE_NAMES)
+
+    def sample(self, rng) -> Mapping:
+        return constrained_random_mapping(rng, self.hw, self.layer)
+
+    def is_valid(self, m: Mapping) -> bool:
+        return mapping_is_valid(m, self.hw, self.layer)[0]
+
+    def features(self, m: Mapping) -> np.ndarray:
+        lb = lb_tiles(m, self.layer)
+        gb = gb_tiles(m, self.layer)
+        f_gb = {d: m.f("gb", d) for d in DIMS}
+        f_dram = {d: m.f("dram", d) for d in DIMS}
+        trips = []
+        for lvl_factors, order in ((f_gb, m.order_gb), (f_dram, m.order_dram)):
+            for t in ("W", "I", "O"):
+                trips.append(np.log1p(_level_trips(order, lvl_factors, RELEVANCE[t])))
+        used = m.used_pes
+        return np.array(
+            [
+                lb["I"] / self.hw.lb_input,
+                lb["W"] / self.hw.lb_weight,
+                lb["O"] / self.hw.lb_output,
+                (gb["I"] + gb["W"] + gb["O"]) / self.hw.gb_entries,
+                m.spatial_x / self.hw.pe_mesh_x,
+                m.spatial_y / self.hw.pe_mesh_y,
+                *trips[:3],
+                *trips[3:],
+                np.log1p(used),
+                np.log1p(self.layer.macs / used),
+            ],
+            dtype=np.float64,
+        )
+
+    def evaluate(self, m: Mapping) -> tuple[float | None, bool]:
+        """Returns (utility, feasible); utility = -log10(EDP), maximized."""
+        ev = evaluate(self.hw, m, self.layer)
+        if not ev.valid:
+            return None, False
+        return -float(np.log10(ev.edp)), True

@@ -1,0 +1,113 @@
+"""Flash-attention forward Pallas TPU kernel (causal, tunable blocks).
+
+Grid: (batch*kv_heads, Sq/bq, Sk/bk) with the K axis innermost; online-softmax
+running state (m, l) and the output accumulator live in VMEM scratch across the
+K steps.  BlockSpecs stage (bq x hd) query tiles and (bk x hd) key/value tiles
+HBM->VMEM; block sizes are BO-tunable with the same VMEM-capacity input
+constraints as the tiled matmul (see repro.core.autotune).
+
+The kernel handles one (batch, kv-head) pair per grid row with the GQA group
+folded into the query tile: q rows are (g * bq, hd).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                  *, bq: int, bk: int, n_k: int, g: int, scale: float):
+    kk = pl.program_id(2)
+    qi = pl.program_id(1)
+
+    @pl.when(kk == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                       # (g*bq, hd)
+    k = k_ref[0]                       # (bk, hd)
+    v = v_ref[0]                       # (bk, hd)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale      # (g*bq, bk)
+
+    # q rows are position-major: row r covers position qi*bq + r // g.
+    qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (g * bq, bk), 0) // g
+    kpos = kk * bk + jax.lax.broadcasted_iota(jnp.int32, (g * bq, bk), 1)
+    s = jnp.where(kpos <= qpos, s, _NEG)
+
+    m_prev = m_ref[...]                # (g*bq, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    m_ref[...] = m_new
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(kk == n_k - 1)
+    def _():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bk", "interpret"))
+def flash_attention(q, k, v, bq: int = 512, bk: int = 512,
+                    interpret: bool = False):
+    """Causal GQA flash attention.
+
+    q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd); H = g * KV.  Returns (B, Sq, H, hd).
+    """
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    g = H // KV
+    bq = min(bq, Sq)
+    bk = min(bk, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0, "divisibility"
+    scale = hd ** -0.5
+
+    # Layout: fold (B, KV) into the grid's leading axis; q rows position-major
+    # within a tile so tiles are contiguous position ranges.
+    qg = q.reshape(B, Sq, KV, g, hd).transpose(0, 2, 1, 3, 4).reshape(B * KV, Sq * g, hd)
+    kg = k.transpose(0, 2, 1, 3).reshape(B * KV, Sk, hd)
+    vg = v.transpose(0, 2, 1, 3).reshape(B * KV, Sk, hd)
+
+    grid = (B * KV, Sq // bq, Sk // bk)
+    n_k = Sk // bk
+
+    def q_index(b, i, kk):
+        return (b, i, 0)
+
+    def kv_index(b, i, kk):
+        return (b, kk, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, bq=bq, bk=bk, n_k=n_k, g=g, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, g * bq, hd), q_index),
+            pl.BlockSpec((1, bk, hd), kv_index),
+            pl.BlockSpec((1, bk, hd), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, g * bq, hd), q_index),
+        out_shape=jax.ShapeDtypeStruct((B * KV, g * Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g * bq, 1), jnp.float32),
+            pltpu.VMEM((g * bq, 1), jnp.float32),
+            pltpu.VMEM((g * bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, kg, vg)
+
+    out = out.reshape(B, KV, Sq, g, hd).transpose(0, 2, 1, 3, 4)
+    return out.reshape(B, Sq, H, hd)

@@ -1,0 +1,25 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On TPU these dispatch to the compiled kernels (interpret=False); everywhere
+else (this CPU container, unit tests) they run the kernel body in interpret
+mode, which executes the same code path block-by-block in Python.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.tiled_matmul import tiled_matmul as _matmul
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def matmul(x, w, bm: int = 256, bk: int = 512, bn: int = 256):
+    return _matmul(x, w, bm=bm, bk=bk, bn=bn, interpret=not _on_tpu())
+
+
+def attention(q, k, v, bq: int = 512, bk: int = 512):
+    return _flash(q, k, v, bq=bq, bk=bk, interpret=not _on_tpu())

@@ -1,0 +1,25 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+
+def matmul_ref(x, w):
+    return jnp.asarray(x) @ jnp.asarray(w)
+
+
+def flash_attention_ref(q, k, v):
+    """Causal GQA attention, materialized-scores reference.
+    q: (B,Sq,H,hd); k,v: (B,Sk,KV,hd) -> (B,Sq,H,hd)."""
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    g = H // KV
+    qq = q.reshape(B, Sq, KV, g, hd).astype(jnp.float32)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qq, k.astype(jnp.float32)) * hd ** -0.5
+    mask = jnp.arange(Sk)[None, :] <= jnp.arange(Sq)[:, None]
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)

@@ -1,0 +1,79 @@
+"""Block-tiled matmul Pallas kernel with BO-tunable BlockSpecs.
+
+This is the TPU-native analogue of the paper's *software mapping*: the block
+shapes (bm, bk, bn) are the loop-blocking factors (S1-S6), the grid order is
+the loop order (S7-S9), and the VMEM capacity bound is the buffer-capacity
+constraint.  `repro.core.autotune` searches this space with the same
+constrained-BO machinery used for the accelerator co-design.
+
+Layout: grid (M/bm, N/bn, K/bk) with K innermost; the fp32 accumulator lives in
+a VMEM scratch buffer across the K steps, flushed to the output tile on the
+last K step -- the standard MXU-friendly schedule.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def vmem_bytes(bm: int, bk: int, bn: int, in_dtype=jnp.bfloat16) -> int:
+    """VMEM working set claimed by the BlockSpecs (input, weight, out, acc)."""
+    ib = jnp.dtype(in_dtype).itemsize
+    return bm * bk * ib + bk * bn * ib + bm * bn * ib + bm * bn * 4
+
+
+def block_is_valid(m: int, k: int, n: int, bm: int, bk: int, bn: int,
+                   vmem_limit: int = 96 * 2 ** 20) -> tuple[bool, str]:
+    """Input constraints for the block-shape search space (paper-style)."""
+    if m % bm or k % bk or n % bn:
+        return False, "divisibility"
+    if bm % 8 or bk % 128 or bn % 128:
+        return False, "mxu_alignment"  # (8,128) VREG tiling / 128-lane MXU
+    if vmem_bytes(bm, bk, bn) > vmem_limit:
+        return False, "vmem_capacity"
+    return True, "ok"
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret"))
+def tiled_matmul(x, w, bm: int = 256, bk: int = 512, bn: int = 256,
+                 interpret: bool = False):
+    """x: (M, K) @ w: (K, N) -> (M, N) via an explicitly tiled Pallas kernel."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    bm, bk, bn = min(bm, m), min(bk, k), min(bn, n)
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, "divisibility"
+    n_k = k // bk
+    grid = (m // bm, n // bn, n_k)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,326 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on the
+production meshes, prove memory fits, and extract the roofline terms.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch phi3-medium-14b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all            # 40 cells, 16x16
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+
+The XLA_FLAGS line above MUST run before any other jax import anywhere
+(jax locks the device count at first init), which is why it is the first
+statement of the module.
+"""
+
+import argparse
+import json
+import re
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ARCH_IDS, SHAPES, ModelConfig, ShapeConfig,
+                                cell_is_applicable, get_config)
+from repro.launch import steps as S
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
+                               make_production_mesh)
+from repro.models.model import build_model, cache_specs, input_specs
+from repro.optim import adamw
+from repro.parallel import sharding
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "artifacts", "dryrun")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\(|)[a-z0-9]+\[[^=]*?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done|)\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes of every collective op in an (SPMD, per-device)
+    HLO module, keyed by op kind.  `-start` ops counted, `-done` skipped."""
+    out: dict[str, int] = {}
+    count: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        if "-done(" in line:
+            continue
+        kind = m.group(2)
+        b = _shape_bytes(m.group(1))
+        out[kind] = out.get(kind, 0) + b
+        count[kind] = count.get(kind, 0) + 1
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    out["ops"] = sum(count.values())
+    return out
+
+
+def count_params(cfg: ModelConfig) -> tuple[float, float]:
+    """(total, active) parameter counts from the param tree shapes."""
+    model = build_model(cfg)
+    shapes = model.param_shapes()
+    paths, _ = jax.tree_util.tree_flatten_with_path(shapes)
+    total = active = 0.0
+    for path, leaf in paths:
+        p = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path).lower()
+        n = 1.0
+        for d in leaf.shape:
+            n *= d
+        total += n
+        if "expert" in p and cfg.num_experts:
+            active += n * (cfg.top_k / cfg.num_experts)
+        else:
+            active += n
+    return total, active
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Useful-work FLOPs for the cell (global): 6*N_active*tokens for training,
+    2*N_active*tokens for inference."""
+    _, active = count_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * active * tokens
+    return 2.0 * active * shape.global_batch  # decode: one token per sequence
+
+
+def lower_cell(cfg: ModelConfig, shape: ShapeConfig, mesh,
+               rules: sharding.AxisRules | None = None, extra_opt=None):
+    """Build + lower the right step function for one cell. Returns lowered."""
+    rules = rules or sharding.AxisRules()
+    opt_cfg = extra_opt or adamw.AdamWConfig(state_dtype=cfg.optimizer_dtype)
+    specs = input_specs(cfg, shape)
+    with sharding.use_mesh(mesh, rules):
+        if shape.kind == "train":
+            model, train_step = S.make_train_step(cfg, opt_cfg)
+            state_shapes = jax.eval_shape(
+                lambda k: S.init_train_state(model, cfg, opt_cfg, k), jax.random.key(0))
+            state_shd = S.state_shardings(model, mesh, rules)
+            batch_shd = S.batch_sharding(cfg, shape, mesh, rules)
+            jf = jax.jit(train_step,
+                         in_shardings=(state_shd, batch_shd),
+                         out_shardings=(state_shd, None),
+                         donate_argnums=(0,))
+            return jf.lower(state_shapes, specs)
+        if shape.kind == "prefill":
+            model, prefill_step = S.make_prefill_step(cfg)
+            pshapes = model.param_shapes()
+            pshd = S.state_shardings(model, mesh, rules, opt=False)
+            batch_shd = S.batch_sharding(cfg, shape, mesh, rules)
+            jf = jax.jit(prefill_step, in_shardings=(pshd, batch_shd))
+            return jf.lower(pshapes, specs)
+        # decode
+        model, serve_step = S.make_decode_step(cfg)
+        pshapes = model.param_shapes()
+        pshd = S.state_shardings(model, mesh, rules, opt=False)
+        cshapes = cache_specs(cfg, shape)
+        cshd = S.cache_sharding(cfg, shape, mesh, rules)
+        batch_shd = S.batch_sharding(cfg, shape, mesh, rules)
+        jf = jax.jit(serve_step,
+                     in_shardings=(pshd, cshd, batch_shd, None),
+                     out_shardings=(None, cshd),
+                     donate_argnums=(1,))
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        return jf.lower(pshapes, cshapes, specs, pos)
+
+
+def _cost_triple(lowered_or_compiled) -> tuple[float, float, float]:
+    compiled = lowered_or_compiled
+    ca = compiled.cost_analysis() or {}
+    coll = collective_bytes(compiled.as_text())
+    return (float(ca.get("flops", 0.0)),
+            float(ca.get("bytes accessed", 0.0)),
+            float(coll.get("total", 0)))
+
+
+def _depth_variant(cfg: ModelConfig, n_periods: int) -> ModelConfig:
+    import dataclasses
+    period = len(cfg.block_pattern)
+    kw = {"num_layers": period * n_periods}
+    if cfg.encoder_layers:
+        kw["encoder_layers"] = n_periods
+        kw["num_layers"] = n_periods
+    return dataclasses.replace(cfg, **kw)
+
+
+def extrapolated_costs(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                       rules=None) -> dict:
+    """XLA counts while-loop bodies once (scan undercount); recover full-depth
+    HLO flops/bytes/collective-bytes by lowering depth-1 and depth-2 variants
+    with ALL scans unrolled (layer scan + flash/mlstm chunk loops) and
+    extrapolating linearly (exact for any cost affine in depth).  The sLSTM
+    per-timestep scan stays rolled (unrolling 4k steps is infeasible); its
+    undercounted recurrent matmuls are ~1/num_heads of that block's FLOPs
+    (documented in models/flops.py)."""
+    from repro.models import layers as L
+    L.ANALYSIS_UNROLL = True
+    try:
+        c1 = _cost_triple(lower_cell(_depth_variant(cfg, 1), shape, mesh, rules).compile())
+        c2 = _cost_triple(lower_cell(_depth_variant(cfg, 2), shape, mesh, rules).compile())
+    finally:
+        L.ANALYSIS_UNROLL = False
+    n = (cfg.num_layers // len(cfg.block_pattern)
+         if not cfg.encoder_layers else cfg.num_layers)
+    return {
+        "flops_dev": c1[0] + (n - 1) * (c2[0] - c1[0]),
+        "bytes_dev": c1[1] + (n - 1) * (c2[1] - c1[1]),
+        "coll_dev": c1[2] + (n - 1) * (c2[2] - c1[2]),
+        "depth1": c1, "depth2": c2, "n_periods": n,
+    }
+
+
+def analyze(lowered, cfg: ModelConfig, shape: ShapeConfig, mesh,
+            rules=None, extrapolate: bool = True) -> dict:
+    t0 = time.time()
+    compiled = lowered.compile()
+    compile_s = time.time() - t0
+    ma = compiled.memory_analysis()
+    n_dev = mesh.devices.size
+
+    raw_flops, raw_bytes, raw_coll = _cost_triple(compiled)
+    if extrapolate:
+        ext = extrapolated_costs(cfg, shape, mesh, rules)
+        flops_dev, bytes_dev, coll_dev = ext["flops_dev"], ext["bytes_dev"], ext["coll_dev"]
+    else:
+        ext = None
+        flops_dev, bytes_dev, coll_dev = raw_flops, raw_bytes, raw_coll
+
+    from repro.models.flops import cell_bytes, cell_flops
+    af = cell_flops(cfg, shape)
+    analytic_hw_dev = af["expected_hw"] / n_dev
+    model_par = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    ab = cell_bytes(cfg, shape, n_dev, model_par)
+
+    compute_t = max(analytic_hw_dev, flops_dev) / PEAK_FLOPS_BF16
+    memory_t = ab["bytes_per_dev"] / HBM_BW
+    coll_t = coll_dev / ICI_BW
+    terms = {"compute_s": compute_t, "memory_s": memory_t, "collective_s": coll_t}
+    bound = max(terms, key=terms.get)
+    step_t = max(terms.values())
+    mfu = (af["useful"] / (PEAK_FLOPS_BF16 * n_dev)) / step_t if step_t > 0 else 0.0
+
+    return {
+        "arch": cfg.name,
+        "shape": shape.name,
+        "kind": shape.kind,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "devices": n_dev,
+        "compile_s": round(compile_s, 1),
+        "memory": {
+            "args_bytes_per_dev": ma.argument_size_in_bytes,
+            "temp_bytes_per_dev": ma.temp_size_in_bytes,
+            "output_bytes_per_dev": ma.output_size_in_bytes,
+            "total_gib_per_dev": round((ma.argument_size_in_bytes
+                                        + ma.temp_size_in_bytes) / 2**30, 3),
+            "fits_16g": (ma.argument_size_in_bytes + ma.temp_size_in_bytes) < 16 * 2**30,
+        },
+        "hlo_flops_per_dev": flops_dev,
+        "hlo_bytes_per_dev_upper": bytes_dev,   # no-fusion upper bound
+        "analytic_bytes_per_dev": ab["bytes_per_dev"],
+        "collective_bytes_per_dev": coll_dev,
+        "hlo_raw_per_dev": {"flops": raw_flops, "bytes": raw_bytes, "coll": raw_coll},
+        "analytic_flops": af,
+        "roofline": dict(terms, bound=bound, step_time_s=step_t),
+        "useful_flops_ratio": (af["useful"] / (flops_dev * n_dev)) if flops_dev else 0.0,
+        "mfu_estimate": mfu,
+    }
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
+             rules: sharding.AxisRules | None = None, save: bool = True,
+             extrapolate: bool | None = None) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = cell_is_applicable(cfg, shape)
+    if extrapolate is None:
+        # multi-pod pass proves compile + sharding; roofline is single-pod
+        extrapolate = not multi_pod
+    if not ok:
+        rec = {"arch": arch, "shape": shape_name, "skipped": why}
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        lowered = lower_cell(cfg, shape, mesh, rules)
+        rec = analyze(lowered, cfg, shape, mesh, rules, extrapolate=extrapolate)
+    if save:
+        tag = "multipod" if multi_pod else "singlepod"
+        d = os.path.abspath(os.path.join(ARTIFACT_DIR, tag))
+        os.makedirs(d, exist_ok=True)
+        with open(os.path.join(d, f"{arch}__{shape_name}.json"), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--strict", action="store_true", help="stop on first failure")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        # cheap cells first so partial sweeps still cover most of the table
+        arch_order = ["smollm-360m", "phi3-medium-14b", "stablelm-12b",
+                      "qwen3-14b", "moonshot-v1-16b-a3b", "seamless-m4t-large-v2",
+                      "recurrentgemma-9b", "llama4-maverick-400b-a17b",
+                      "qwen2-vl-72b", "xlstm-1.3b"]
+        shape_order = ["decode_32k", "long_500k", "train_4k", "prefill_32k"]
+        for a in arch_order:
+            for s in shape_order:
+                cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        cells = [(args.arch, args.shape)]
+
+    for arch, shape_name in cells:
+        t0 = time.time()
+        try:
+            rec = run_cell(arch, shape_name, multi_pod=args.multi_pod)
+        except Exception as e:  # a dry-run failure is a bug; surface loudly
+            msg = str(e).splitlines()[0][:200] if str(e) else ""
+            print(f"FAIL  {arch} x {shape_name}: {type(e).__name__}: {msg}", flush=True)
+            if args.strict:
+                raise
+            continue
+        if "skipped" in rec:
+            print(f"SKIP  {arch} x {shape_name}: {rec['skipped']}")
+            continue
+        r = rec["roofline"]
+        print(f"OK    {arch} x {shape_name} [{rec['mesh']}] "
+              f"compile {rec['compile_s']}s | "
+              f"mem/dev {rec['memory']['total_gib_per_dev']} GiB fits={rec['memory']['fits_16g']} | "
+              f"compute {r['compute_s']:.3e}s mem {r['memory_s']:.3e}s coll {r['collective_s']:.3e}s "
+              f"bound={r['bound']} | useful {rec['useful_flops_ratio']:.2f} "
+              f"MFU~{rec['mfu_estimate']:.2%} ({time.time()-t0:.0f}s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+Importing this module never touches jax device state; meshes are built inside
+functions only.  The production target is TPU v5e: 16x16 = 256 chips per pod,
+2 pods = 512 chips for the multi-pod dry-run.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh_for(devices: int, model_parallel: int = 16):
+    """Elastic variant: biggest (data, model) mesh for `devices` devices."""
+    model = min(model_parallel, devices)
+    while devices % model:
+        model -= 1
+    return jax.make_mesh(
+        (devices // model, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+# v5e hardware constants for the roofline (per chip).
+PEAK_FLOPS_BF16 = 197e12     # FLOP/s
+HBM_BW = 819e9               # B/s
+ICI_BW = 50e9                # B/s per link

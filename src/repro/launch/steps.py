@@ -1,0 +1,115 @@
+"""Step-function builders (train / prefill / decode) plus their sharding specs.
+Shared by the dry-run, the trainer, and the server."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.model import build_model, cache_specs, input_specs
+from repro.optim import adamw
+from repro.parallel import sharding
+
+
+def _dp_if_divides(mesh, rules, size: int):
+    """The batch axes, dropped when the batch dim doesn't divide them."""
+    dp = sharding._filter_spec(mesh, (rules.batch,))[0]
+    if dp is None:
+        return None
+    axes = dp if isinstance(dp, tuple) else (dp,)
+    total = 1
+    for a in axes:
+        total *= mesh.shape[a]
+    return dp if size % total == 0 else None
+
+
+def batch_sharding(cfg: ModelConfig, shape: ShapeConfig, mesh, rules):
+    """NamedShardings for the data batch: batch dim over (pod, data)."""
+    specs = {}
+    for name, sds in input_specs(cfg, shape).items():
+        bdim = 1 if name == "positions" else 0  # positions: (3, B, S)
+        dp = _dp_if_divides(mesh, rules, sds.shape[bdim]) if sds.ndim > bdim else None
+        spec = [None] * sds.ndim
+        if sds.ndim > bdim:
+            spec[bdim] = dp
+        specs[name] = NamedSharding(mesh, sharding._filter_spec(mesh, tuple(spec)))
+    return specs
+
+
+def cache_sharding(cfg: ModelConfig, shape: ShapeConfig, mesh, rules):
+    """Shardings for the decode cache: dim1 = batch; long KV length axes go to
+    the model axis (sequence-sharded cache) when divisible."""
+    dp = rules.batch
+
+    def leaf_spec(leaf):
+        dims = [None] * leaf.ndim
+        if leaf.ndim >= 3:
+            dims[1] = _dp_if_divides(mesh, rules, leaf.shape[1])  # (n_super, B, ...)
+            # k/v caches: (n_super, B, S, KV, hd) -> shard S over model
+            kv_axis = rules.kv_len if rules.kv_len is not None else "model"
+            if leaf.ndim >= 5 and leaf.shape[2] % mesh.shape.get(kv_axis, 1) == 0:
+                dims[2] = kv_axis
+        return NamedSharding(mesh, sharding._filter_spec(mesh, tuple(dims)))
+
+    cs = cache_specs(cfg, shape)
+    if cfg.family == "encdec":
+        cache, enc = cs
+        enc_dp = _dp_if_divides(mesh, rules, enc.shape[0])
+        enc_shd = NamedSharding(mesh, sharding._filter_spec(mesh, (enc_dp, None, None)))
+        return (jax.tree.map(leaf_spec, cache), enc_shd)
+    return jax.tree.map(leaf_spec, cs)
+
+
+def state_shardings(model, mesh, rules, opt: bool = True):
+    pshapes = model.param_shapes()
+    pspecs = sharding.tree_param_specs(pshapes, mesh, rules)
+    if not opt:
+        return pspecs
+    return {
+        "params": pspecs,
+        "opt": {
+            "mu": pspecs,
+            "nu": pspecs,
+            "step": NamedSharding(mesh, P()),
+        },
+    }
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig):
+    model = build_model(cfg)
+
+    def train_step(state, batch):
+        loss, grads = jax.value_and_grad(model.loss)(state["params"], batch)
+        new_params, new_opt, metrics = adamw.apply_updates(
+            opt_cfg, state["params"], state["opt"], grads)
+        metrics = dict(metrics, loss=loss)
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return model, train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    model = build_model(cfg)
+
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+
+    return model, prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    model = build_model(cfg)
+
+    def serve_step(params, cache, batch, pos):
+        return model.decode_step(params, cache, batch, pos)
+
+    return model, serve_step
+
+
+def init_train_state(model, cfg: ModelConfig, opt_cfg: adamw.AdamWConfig, key):
+    params = model.init(key)
+    return {"params": params, "opt": adamw.init_state(opt_cfg, params)}

@@ -1,0 +1,201 @@
+"""Encoder-decoder backbone (SeamlessM4T).  The speech frontend is a stub: the
+encoder consumes precomputed frame embeddings (B, S_src, D).  Decoder layers:
+causal self-attention + cross-attention + SwiGLU MLP; scan over stacked layers.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.parallel import sharding
+
+
+def _dtype(name):
+    return jnp.dtype(name)
+
+
+class EncDecLM:
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.encoder_layers > 0
+        self.cfg = cfg
+
+    # -- params ---------------------------------------------------------------
+
+    def _init_enc_layer(self, key, dtype):
+        k1, k2 = jax.random.split(key)
+        return {"attn": L.init_attention(k1, self.cfg, dtype),
+                "mlp": L.init_mlp(k2, self.cfg, dtype)}
+
+    def _init_dec_layer(self, key, dtype):
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {"self_attn": L.init_attention(k1, self.cfg, dtype),
+                "cross_attn": L.init_attention(k2, self.cfg, dtype),
+                "mlp": L.init_mlp(k3, self.cfg, dtype)}
+
+    def init(self, key):
+        cfg = self.cfg
+        dtype = _dtype(cfg.param_dtype)
+        ks = jax.random.split(key, 5)
+        params = {
+            "embed": L.init_embed(ks[0], cfg, dtype),
+            "in_proj": L.dense_init(ks[1], (cfg.d_model, cfg.d_model), dtype),
+            "pos_embed": L.dense_init(ks[2], (32768, cfg.d_model), dtype, scale=0.02),
+            "final_ln": jnp.zeros((cfg.d_model,), dtype),
+            "enc_final_ln": jnp.zeros((cfg.d_model,), dtype),
+        }
+        enc_keys = jax.random.split(ks[3], cfg.encoder_layers)
+        dec_keys = jax.random.split(ks[4], cfg.num_layers)
+        params["encoder"] = jax.vmap(lambda k: self._init_enc_layer(k, dtype))(enc_keys)
+        params["decoder"] = jax.vmap(lambda k: self._init_dec_layer(k, dtype))(dec_keys)
+        return params
+
+    def param_shapes(self):
+        return jax.eval_shape(lambda k: self.init(k), jax.random.key(0))
+
+    def _cast(self, params):
+        cdt = _dtype(self.cfg.compute_dtype)
+        return jax.tree.map(lambda a: a.astype(cdt) if jnp.issubdtype(a.dtype, jnp.floating) else a, params)
+
+    # -- encoder ----------------------------------------------------------------
+
+    def _positions(self, B, S):
+        return jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def encode(self, params, src_embeddings):
+        cfg = self.cfg
+        cdt = _dtype(cfg.compute_dtype)
+        x = src_embeddings.astype(cdt) @ params["in_proj"]
+        S = x.shape[1]
+        x = x + params["pos_embed"][:S][None].astype(cdt)
+        positions = self._positions(x.shape[0], S)
+
+        def body(h, pslice):
+            # bidirectional attention: no causal mask
+            B, S, D = h.shape
+            q, k, v = L._qkv(pslice["attn"], cfg, h, positions)
+            mask = jnp.ones((1, 1, S, S), bool)
+            att = L._sdpa(q, k, v, mask, cfg.q_per_kv) @ pslice["attn"]["wo"]
+            h = h + sharding.act(att, "batch", "seq", "dmodel")
+            h = h + L.mlp(pslice["mlp"], h)
+            return h, None
+
+        if cfg.remat == "block":
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, _ = jax.lax.scan(body, x, params["encoder"], unroll=L.analysis_unroll(cfg.encoder_layers))
+        return L.rmsnorm(x, params["enc_final_ln"])
+
+    # -- decoder ------------------------------------------------------------------
+
+    def _cross(self, pslice, h, enc_kv):
+        """Cross-attention with precomputed encoder K/V."""
+        cfg = self.cfg
+        B, S, D = h.shape
+        H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+        p = pslice["cross_attn"]
+        hn = L.rmsnorm(h, p["ln"])
+        q = (hn @ p["wq"]).reshape(B, S, H, hd)
+        k, v = enc_kv
+        mask = jnp.ones((1, 1, S, k.shape[1]), bool)
+        out = L._sdpa(q, k, v, mask, cfg.q_per_kv) @ p["wo"]
+        return sharding.act(out, "batch", "seq", "dmodel")
+
+    def _enc_kv(self, pslice, enc_out):
+        cfg = self.cfg
+        B, S, D = enc_out.shape
+        p = pslice["cross_attn"]
+        k = (enc_out @ p["wk"]).reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+        v = (enc_out @ p["wv"]).reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+        return k, v
+
+    def _decoder(self, params, tokens, enc_out):
+        cfg = self.cfg
+        cdt = _dtype(cfg.compute_dtype)
+        x = L.embed(params["embed"], tokens).astype(cdt)
+        B, S = x.shape[:2]
+        x = x + params["pos_embed"][:S][None].astype(cdt)
+        positions = self._positions(B, S)
+
+        def body(h, pslice):
+            B, S, D = h.shape
+            q, k, v = L._qkv(pslice["self_attn"], cfg, h, positions)
+            att = L.full_seq_sdpa(cfg, q, k, v, 0) @ pslice["self_attn"]["wo"]
+            h = h + sharding.act(att, "batch", "seq", "dmodel")
+            h = h + self._cross(pslice, h, self._enc_kv(pslice, enc_out))
+            h = h + L.mlp(pslice["mlp"], h)
+            return h, None
+
+        if cfg.remat == "block":
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, _ = jax.lax.scan(body, x, params["decoder"], unroll=L.analysis_unroll(cfg.num_layers))
+        return L.rmsnorm(x, params["final_ln"])
+
+    # -- public API -----------------------------------------------------------------
+
+    def loss(self, params, batch):
+        params = self._cast(params)
+        enc_out = self.encode(params, batch["src_embeddings"])
+        x = self._decoder(params, batch["tokens"], enc_out)
+        return L.softmax_xent(params["embed"], x, batch["labels"], self.cfg.vocab_size)
+
+    def init_cache(self, batch: int, seq_len: int):
+        cfg = self.cfg
+        spec = L.CacheSpec(seq_len, cfg.kv_cache_dtype)
+
+        def one(_):
+            return {"self": L.init_kv_cache(cfg, batch, spec)}
+
+        caches = jax.vmap(one)(jnp.arange(cfg.num_layers))
+        return caches
+
+    def prefill(self, params, batch):
+        """Encode src and prefill the decoder self-attention cache."""
+        params = self._cast(params)
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["src_embeddings"])
+        tokens = batch["tokens"]
+        cdt = _dtype(cfg.compute_dtype)
+        x = L.embed(params["embed"], tokens).astype(cdt)
+        B, S = x.shape[:2]
+        x = x + params["pos_embed"][:S][None].astype(cdt)
+        positions = self._positions(B, S)
+        spec = L.CacheSpec(S, cfg.kv_cache_dtype)
+
+        def body(h, pslice):
+            delta, cache = L.attention_prefill(pslice["self_attn"], cfg, h, positions, 0, spec)
+            h = h + delta
+            h = h + self._cross(pslice, h, self._enc_kv(pslice, enc_out))
+            h = h + L.mlp(pslice["mlp"], h)
+            return h, {"self": cache}
+
+        if cfg.remat == "block":
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, cache = jax.lax.scan(body, x, params["decoder"], unroll=L.analysis_unroll(cfg.num_layers))
+        x = L.rmsnorm(x, params["final_ln"])
+        logits = L.unembed_logits(params["embed"], x[:, -1:])
+        return logits, (cache, enc_out)
+
+    def decode_step(self, params, cache_and_enc, batch, pos):
+        params = self._cast(params)
+        cfg = self.cfg
+        cache, enc_out = cache_and_enc
+        cdt = _dtype(cfg.compute_dtype)
+        x = L.embed(params["embed"], batch["tokens"]).astype(cdt)
+        pidx = jnp.minimum(pos, params["pos_embed"].shape[0] - 1)
+        x = x + jax.lax.dynamic_slice_in_dim(params["pos_embed"].astype(cdt),
+                                             pidx, 1, axis=0)[None]
+
+        def body(h, xs):
+            pslice, cslice = xs
+            delta, new_c = L.attention_decode(pslice["self_attn"], cfg, h, cslice["self"], pos, 0)
+            h = h + delta
+            h = h + self._cross(pslice, h, self._enc_kv(pslice, enc_out))
+            h = h + L.mlp(pslice["mlp"], h)
+            return h, {"self": new_c}
+
+        x, new_cache = jax.lax.scan(body, x, (params["decoder"], cache), unroll=L.analysis_unroll(cfg.num_layers))
+        x = L.rmsnorm(x, params["final_ln"])
+        logits = L.unembed_logits(params["embed"], x)
+        return logits, (new_cache, enc_out)

@@ -1,0 +1,289 @@
+"""Decoder-only LM over heterogeneous block patterns.
+
+Layers are grouped into "super-blocks" of one block-pattern period; parameters
+are stacked over super-blocks and the stack is traversed with `jax.lax.scan`
+(constant compile time in depth -- required for 80-layer dry-runs and correct
+for production).  Remat ("block") checkpoints each super-block.
+
+Block kinds: attn | local_attn | moe | mlstm | slstm | rglru.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import rglru as RG
+from repro.models import xlstm as XL
+from repro.parallel import sharding
+
+
+def _dtype(name):
+    return jnp.dtype(name)
+
+
+# ------------------------------------------------------------ per-kind dispatch
+
+def init_block(kind: str, key, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    if kind in ("attn", "local_attn"):
+        p = {"attn": L.init_attention(k1, cfg, dtype)}
+        if cfg.d_ff > 0:
+            p["mlp"] = L.init_mlp(k2, cfg, dtype)
+        return p
+    if kind == "moe":
+        return {"attn": L.init_attention(k1, cfg, dtype),
+                "moe": MOE.init_moe(k2, cfg, dtype)}
+    if kind == "mlstm":
+        return {"mlstm": XL.init_mlstm_block(k1, cfg, dtype)}
+    if kind == "slstm":
+        return {"slstm": XL.init_slstm_block(k1, cfg, dtype)}
+    if kind == "rglru":
+        p = {"rglru": RG.init_rglru_block(k1, cfg, dtype)}
+        if cfg.d_ff > 0:
+            p["mlp"] = L.init_mlp(k2, cfg, dtype)
+        return p
+    raise ValueError(kind)
+
+
+def apply_block(kind: str, p, cfg: ModelConfig, x, positions):
+    window = cfg.local_window if kind == "local_attn" else 0
+    if kind in ("attn", "local_attn"):
+        x = x + L.attention(p["attn"], cfg, x, positions, window)
+        if "mlp" in p:
+            x = x + L.mlp(p["mlp"], x)
+        return x
+    if kind == "moe":
+        x = x + L.attention(p["attn"], cfg, x, positions, 0)
+        return x + MOE.moe_block(p["moe"], cfg, x)
+    if kind == "mlstm":
+        return x + XL.mlstm_block(p["mlstm"], cfg, x)
+    if kind == "slstm":
+        return x + XL.slstm_block(p["slstm"], cfg, x)
+    if kind == "rglru":
+        x = x + RG.rglru_block(p["rglru"], cfg, x)
+        if "mlp" in p:
+            x = x + L.mlp(p["mlp"], x)
+        return x
+    raise ValueError(kind)
+
+
+def init_block_cache(kind: str, cfg: ModelConfig, batch: int, spec: L.CacheSpec):
+    if kind in ("attn", "moe"):
+        return L.init_kv_cache(cfg, batch, spec)
+    if kind == "local_attn":
+        # Rolling-window cache: only local_window slots, plus absolute pos ids.
+        W = min(cfg.local_window or spec.seq_len, spec.seq_len)
+        c = L.init_kv_cache(cfg, batch, L.CacheSpec(W, spec.dtype))
+        c["pos_ids"] = jnp.full((W,), -1, jnp.int32)
+        return c
+    if kind == "mlstm":
+        return XL.init_mlstm_state(cfg, batch)
+    if kind == "slstm":
+        return XL.init_slstm_state(cfg, batch)
+    if kind == "rglru":
+        return RG.init_rglru_state(cfg, batch)
+    raise ValueError(kind)
+
+
+def apply_block_decode(kind: str, p, cfg: ModelConfig, x, cache, pos):
+    if kind in ("attn", "local_attn", "moe"):
+        if kind == "local_attn":
+            delta, cache = L.attention_decode_windowed(p["attn"], cfg, x, cache, pos)
+        else:
+            delta, cache = L.attention_decode(p["attn"], cfg, x, cache, pos, 0)
+        x = x + delta
+        if kind == "moe":
+            x = x + MOE.moe_block(p["moe"], cfg, x)
+        elif "mlp" in p:
+            x = x + L.mlp(p["mlp"], x)
+        return x, cache
+    if kind == "mlstm":
+        delta, st = XL.mlstm_block_decode(p["mlstm"], cfg, x, cache)
+        return x + delta, st
+    if kind == "slstm":
+        delta, st = XL.slstm_block_decode(p["slstm"], cfg, x, cache)
+        return x + delta, st
+    if kind == "rglru":
+        delta, st = RG.rglru_block_decode(p["rglru"], cfg, x, cache)
+        x = x + delta
+        if "mlp" in p:
+            x = x + L.mlp(p["mlp"], x)
+        return x, cache if st is None else st
+    raise ValueError(kind)
+
+
+# ----------------------------------------------------------------------- model
+
+class LM:
+    """Functional decoder-only LM; all methods are pure and jit-friendly."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.pattern = cfg.block_pattern
+        self.n_super = cfg.num_layers // len(self.pattern)
+
+    # -- params -----------------------------------------------------------
+
+    def init(self, key):
+        cfg = self.cfg
+        dtype = _dtype(cfg.param_dtype)
+        k_embed, k_blocks = jax.random.split(key)
+        params = {"embed": L.init_embed(k_embed, cfg, dtype),
+                  "final_ln": jnp.zeros((cfg.d_model,), dtype)}
+        if cfg.input_mode == "embeddings":
+            params["in_proj"] = L.dense_init(jax.random.fold_in(k_embed, 1),
+                                             (cfg.d_model, cfg.d_model), dtype)
+
+        def init_super(k):
+            ks = jax.random.split(k, len(self.pattern))
+            return {f"pos{i}": init_block(kind, ks[i], cfg, dtype)
+                    for i, kind in enumerate(self.pattern)}
+
+        keys = jax.random.split(k_blocks, self.n_super)
+        params["blocks"] = jax.vmap(init_super)(keys)
+        return params
+
+    def param_shapes(self):
+        return jax.eval_shape(lambda k: self.init(k), jax.random.key(0))
+
+    # -- shared forward ----------------------------------------------------
+
+    def _inputs(self, params, batch):
+        cfg = self.cfg
+        cdt = _dtype(cfg.compute_dtype)
+        if cfg.input_mode == "embeddings":
+            x = batch["embeddings"].astype(cdt) @ params["in_proj"].astype(cdt)
+        else:
+            x = L.embed(params["embed"], batch["tokens"]).astype(cdt)
+        B, S = x.shape[:2]
+        if cfg.mrope:
+            positions = batch.get("positions")
+            if positions is None:
+                positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+                positions = jnp.broadcast_to(positions[None], (3, B, S))
+        else:
+            positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        return x, positions
+
+    def _cast(self, params):
+        cdt = _dtype(self.cfg.compute_dtype)
+        return jax.tree.map(lambda a: a.astype(cdt) if a.dtype in
+                            (jnp.float32, jnp.bfloat16, jnp.float16) else a, params)
+
+    def _backbone(self, params, x, positions):
+        cfg = self.cfg
+        pattern = self.pattern
+
+        def body(h, pslice):
+            for i, kind in enumerate(pattern):
+                h = apply_block(kind, pslice[f"pos{i}"], cfg, h, positions)
+            h = sharding.act(h, "batch", "seq", "dmodel")
+            return h, None
+
+        if cfg.remat == "block":
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, _ = jax.lax.scan(body, x, params["blocks"], unroll=L.analysis_unroll(self.n_super))
+        return L.rmsnorm(x, params["final_ln"])
+
+    # -- train ---------------------------------------------------------------
+
+    def loss(self, params, batch):
+        params = self._cast(params)
+        x, positions = self._inputs(params, batch)
+        x = self._backbone(params, x, positions)
+        return L.softmax_xent(params["embed"], x, batch["labels"], self.cfg.vocab_size)
+
+    # -- serve -----------------------------------------------------------------
+
+    def cache_spec(self, seq_len: int) -> L.CacheSpec:
+        return L.CacheSpec(seq_len, self.cfg.kv_cache_dtype)
+
+    def init_cache(self, batch: int, seq_len: int):
+        spec = self.cache_spec(seq_len)
+
+        def one(_):
+            return {f"pos{i}": init_block_cache(kind, self.cfg, batch, spec)
+                    for i, kind in enumerate(self.pattern)}
+
+        return jax.vmap(one)(jnp.arange(self.n_super))
+
+    def decode_step(self, params, cache, batch, pos):
+        """batch: {"tokens": (B,1)} or {"embeddings": (B,1,D)}; pos scalar."""
+        params = self._cast(params)
+        cfg = self.cfg
+        cdt = _dtype(cfg.compute_dtype)
+        if cfg.input_mode == "embeddings":
+            x = batch["embeddings"].astype(cdt) @ params["in_proj"]
+        else:
+            x = L.embed(params["embed"], batch["tokens"]).astype(cdt)
+
+        pattern = self.pattern
+
+        def body(h, xs):
+            pslice, cslice = xs
+            new_c = {}
+            for i, kind in enumerate(pattern):
+                h, new_c[f"pos{i}"] = apply_block_decode(
+                    kind, pslice[f"pos{i}"], cfg, h, cslice[f"pos{i}"], pos)
+            return h, new_c
+
+        x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache), unroll=L.analysis_unroll(self.n_super))
+        x = L.rmsnorm(x, params["final_ln"])
+        logits = L.unembed_logits(params["embed"], x)
+        return logits, new_cache
+
+    def prefill(self, params, batch):
+        """Full-sequence forward that also produces the decode cache."""
+        params = self._cast(params)
+        cfg = self.cfg
+        x, positions = self._inputs(params, batch)
+        B, S = x.shape[:2]
+        spec = self.cache_spec(S)
+        pattern = self.pattern
+
+        def body(h, pslice):
+            new_c = {}
+            for i, kind in enumerate(pattern):
+                h, new_c[f"pos{i}"] = apply_block_prefill(
+                    kind, pslice[f"pos{i}"], cfg, h, positions, spec)
+            h = sharding.act(h, "batch", "seq", "dmodel")
+            return h, new_c
+
+        if cfg.remat == "block":
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, cache = jax.lax.scan(body, x, params["blocks"], unroll=L.analysis_unroll(self.n_super))
+        x = L.rmsnorm(x, params["final_ln"])
+        logits = L.unembed_logits(params["embed"], x[:, -1:])
+        return logits, cache
+
+
+def apply_block_prefill(kind: str, p, cfg: ModelConfig, x, positions, spec):
+    """Like apply_block but also returns the populated decode cache/state."""
+    if kind in ("attn", "local_attn", "moe"):
+        window = cfg.local_window if kind == "local_attn" else 0
+        delta, cache = L.attention_prefill(p["attn"], cfg, x, positions, window, spec)
+        x = x + delta
+        if kind == "moe":
+            x = x + MOE.moe_block(p["moe"], cfg, x)
+        elif "mlp" in p:
+            x = x + L.mlp(p["mlp"], x)
+        return x, cache
+    if kind == "mlstm":
+        delta, st = XL.mlstm_block_prefill(p["mlstm"], cfg, x)
+        return x + delta, st
+    if kind == "slstm":
+        delta, st = XL.slstm_block(p["slstm"], cfg, x, return_state=True)
+        return x + delta, st
+    if kind == "rglru":
+        delta, st = RG.rglru_block(p["rglru"], cfg, x, return_state=True)
+        x = x + delta
+        if "mlp" in p:
+            x = x + L.mlp(p["mlp"], x)
+        return x, st
+    raise ValueError(kind)

@@ -1,0 +1,168 @@
+"""Mixture-of-Experts block with expert parallelism.
+
+Top-k routing with capacity-bounded per-expert token gathering, so compiled
+FLOPs stay proportional to *active* parameters (k/E of dense-all-experts), the
+property the roofline analysis depends on.  Two paths:
+
+  * gathered path (large T): per expert, select its top-C tokens by routing
+    weight (argsort -- static shapes, partitioner-friendly), dense FFN on the
+    (C, D) gather, scatter-add back.  C = cf * T * k / E.
+  * masked-dense path (tiny T, decode): compute all experts on all tokens and
+    mask -- cheaper than sorting when T is a few hundred tokens.
+
+Experts are sharded over the "model" mesh axis via param_spec ("expert" in the
+leaf path); token activations are batch-sharded.  The gather/scatter pattern
+lowers to all-to-all style collectives under GSPMD.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, rmsnorm, split_keys
+from repro.parallel import sharding
+
+_CAPACITY_FACTOR = 2.0
+_DENSE_PATH_MAX_TOKENS = 512
+
+
+def init_moe(key, cfg: ModelConfig, dtype):
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = split_keys(key, 3)
+    return {
+        "ln": jnp.zeros((D,), dtype),
+        "router": dense_init(ks[0], (D, E), dtype),
+        "expert_wi": dense_init(ks[1], (E, D, 2 * F), dtype),
+        "expert_wo": dense_init(ks[2], (E, F, D), dtype, scale=F ** -0.5),
+    }
+
+
+def _expert_ffn(wi, wo, x):
+    gu = x @ wi
+    gate, up = jnp.split(gu, 2, axis=-1)
+    return (jax.nn.silu(gate) * up) @ wo
+
+
+def moe_block(p, cfg: ModelConfig, x):
+    """x: (B, S, D) -> (B, S, D).
+
+    Under an active mesh this runs as an explicit shard_map: tokens stay in
+    their data shard, each model rank computes only its E/TP local experts on
+    top-C locally-gathered tokens, and a single (T_loc, D) psum over the model
+    axis combines expert contributions -- no global token gather/scatter
+    (the GSPMD default for this pattern all-gathers the full token matrix;
+    observed ~66s of collectives/step on moonshot train_4k)."""
+    mesh = sharding.current_mesh()
+    if (mesh is not None and "model" in mesh.shape
+            and cfg.num_experts % mesh.shape["model"] == 0):
+        return _moe_block_shardmap(p, cfg, x, mesh)
+    return _moe_block_local(p, cfg, x)
+
+
+def _moe_block_local(p, cfg: ModelConfig, x):
+    B, S, D = x.shape
+    E, k = cfg.num_experts, cfg.top_k
+    T = B * S
+    h = rmsnorm(x, p["ln"]).reshape(T, D)
+
+    logits = (h @ p["router"]).astype(jnp.float32)          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, k)                    # (T, k)
+    topw = topw / (jnp.sum(topw, axis=-1, keepdims=True) + 1e-9)
+
+    if T <= _DENSE_PATH_MAX_TOKENS:
+        out = _masked_dense(p, h, topw, topi, E)
+    else:
+        out = _gathered(p, h, topw, topi, E, k)
+    out = out.reshape(B, S, D).astype(x.dtype)
+    return sharding.act(out, "batch", "seq", "dmodel")
+
+
+def _moe_block_shardmap(p, cfg: ModelConfig, x, mesh):
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+
+    B, S, D = x.shape
+    E, k = cfg.num_experts, cfg.top_k
+    tp = mesh.shape["model"]
+    E_loc = E // tp
+    dp_axes = sharding.batch_axes_for(x.shape[0])
+
+    def f(ln, router, wi, wo, xs):
+        # xs: (B_loc, S, D) -- replicated over the model axis.
+        Bl = xs.shape[0]
+        T = Bl * S
+        h = rmsnorm(xs, ln).reshape(T, D)
+        logits = (h @ router).astype(jnp.float32)           # (T, E) full router
+        probs = jax.nn.softmax(logits, axis=-1)
+        topw, topi = jax.lax.top_k(probs, k)
+        topw = topw / (jnp.sum(topw, axis=-1, keepdims=True) + 1e-9)
+        # combine weight per (token, local expert)
+        e0 = jax.lax.axis_index("model") * E_loc
+        w_te = jnp.zeros((T, E_loc), jnp.float32)
+
+        def add_slot(w_te, slot):
+            idx = topi[:, slot] - e0
+            inb = (idx >= 0) & (idx < E_loc)
+            return w_te.at[jnp.arange(T), jnp.clip(idx, 0, E_loc - 1)].add(
+                jnp.where(inb, topw[:, slot], 0.0))
+
+        for slot in range(k):
+            w_te = add_slot(w_te, slot)
+
+        C = int(min(max(1, round(_CAPACITY_FACTOR * T * k / E)), T))
+        gw, gi = jax.lax.top_k(w_te.T, C)                   # (E_loc, C)
+        toks = jnp.take(h, gi.reshape(-1), axis=0).reshape(E_loc, C, D)
+        ys = jax.vmap(_expert_ffn)(wi, wo, toks)            # (E_loc, C, D)
+        ys = ys.astype(jnp.float32) * gw[..., None]
+        out = jnp.zeros((T, D), jnp.float32)
+        out = out.at[gi.reshape(-1)].add(ys.reshape(E_loc * C, D))
+        # combine in bf16: halves the dominant psum traffic; <=TP partials of
+        # already-normalized expert outputs keep the error ~1e-2 relative
+        out = jax.lax.psum(out.astype(jnp.bfloat16), "model")
+        return out.reshape(Bl, S, D)
+
+    out = shard_map(
+        f, mesh=mesh,
+        in_specs=(P(None), P(None, None), P("model", None, None),
+                  P("model", None, None), P(dp_axes, None, None)),
+        out_specs=P(dp_axes, None, None),
+        check_rep=False,
+    )(p["ln"], p["router"], p["expert_wi"], p["expert_wo"], x)
+    out = out.astype(x.dtype)
+    return sharding.act(out, "batch", "seq", "dmodel")
+
+
+def _masked_dense(p, h, topw, topi, E):
+    T, D = h.shape
+    # combine weight per (token, expert): sum over the k slots.
+    w_te = jnp.zeros((T, E), jnp.float32)
+    w_te = jax.vmap(lambda w, i, row: row.at[i].add(w), in_axes=(0, 0, 0))(topw, topi, w_te)
+    ys = jax.vmap(lambda wi, wo: _expert_ffn(wi, wo, h), in_axes=(0, 0))(
+        p["expert_wi"], p["expert_wo"]
+    )                                                        # (E, T, D)
+    return jnp.einsum("te,etd->td", w_te, ys.astype(jnp.float32))
+
+
+def _gathered(p, h, topw, topi, E, k):
+    T, D = h.shape
+    C = int(max(1, round(_CAPACITY_FACTOR * T * k / E)))
+    C = min(C, T)
+    # Per-expert affinity: routing weight if the token picked this expert, else 0.
+    w_te = jnp.zeros((T, E), jnp.float32)
+    w_te = jax.vmap(lambda w, i, row: row.at[i].add(w), in_axes=(0, 0, 0))(topw, topi, w_te)
+
+    # Top-C token ids per expert (static shapes; ties/zeros simply waste a slot).
+    gather_w, gather_idx = jax.lax.top_k(w_te.T, C)          # (E, C)
+    toks = jnp.take(h, gather_idx.reshape(-1), axis=0).reshape(E, C, D)
+
+    ys = jax.vmap(lambda wi, wo, xe: _expert_ffn(wi, wo, xe), in_axes=(0, 0, 0))(
+        p["expert_wi"], p["expert_wo"], toks
+    )                                                        # (E, C, D)
+    ys = ys.astype(jnp.float32) * gather_w[..., None]
+
+    out = jnp.zeros((T, D), jnp.float32)
+    out = out.at[gather_idx.reshape(-1)].add(ys.reshape(E * C, D))
+    return out

@@ -1,0 +1,92 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+The Real-Gated Linear Recurrent Unit:
+    r_t = sigmoid(W_a u_t)            recurrence gate
+    i_t = sigmoid(W_x u_t)            input gate
+    a_t = exp(-c * softplus(Lambda) * r_t)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+Training/prefill uses `jax.lax.associative_scan` (log-depth on TPU) over the
+linear recurrence; decode keeps (conv window, h) as O(1) state.  The block is
+the Griffin recurrent mixer: linear in, depthwise causal conv(4), RG-LRU,
+GeGLU-style output gating, linear out.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, rmsnorm, split_keys
+from repro.models.xlstm import _causal_conv
+from repro.parallel import sharding
+
+_C = 8.0
+
+
+def init_rglru_block(key, cfg: ModelConfig, dtype):
+    D = cfg.d_model
+    ks = split_keys(key, 6)
+    return {
+        "ln": jnp.zeros((D,), dtype),
+        "w_x": dense_init(ks[0], (D, D), dtype),
+        "w_gate": dense_init(ks[1], (D, D), dtype),
+        "conv_w": dense_init(ks[2], (cfg.rglru_conv_width, D), dtype, scale=0.5),
+        "w_a": dense_init(ks[3], (D, D), dtype, scale=0.01),
+        "w_i": dense_init(ks[4], (D, D), dtype, scale=0.01),
+        # Lambda init so a^c in (0.9, 0.999) at r=1 (paper's init range)
+        "lam": jnp.linspace(2.0, 6.0, D).astype(dtype),
+        "w_o": dense_init(ks[5], (D, D), dtype, scale=D ** -0.5),
+    }
+
+
+def _gates(p, u):
+    r = jax.nn.sigmoid((u @ p["w_a"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((u @ p["w_i"]).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * i * u.astype(jnp.float32)
+    return a, b
+
+
+def rglru_block(p, cfg: ModelConfig, x, state=None, return_state=False):
+    """x: (B,S,D) -> delta (B,S,D)."""
+    h = rmsnorm(x, p["ln"])
+    u = h @ p["w_x"]
+    g = jax.nn.gelu(h @ p["w_gate"])
+    u_raw = u
+    decode = state is not None and x.shape[1] == 1
+    if decode:
+        u, new_conv = _causal_conv(u, p["conv_w"], state["conv"].astype(u.dtype))
+        a, b = _gates(p, u)
+        hh = a[:, 0] * state["h"] + b[:, 0]
+        out_h = hh[:, None]
+        new_state = {"conv": new_conv.astype(jnp.float32), "h": hh}
+    else:
+        u, _ = _causal_conv(u, p["conv_w"])
+        a, b = _gates(p, u)
+        if state is not None:  # fold initial state into the first step
+            b = b.at[:, 0].add(a[:, 0] * state["h"])
+        _, bb = jax.lax.associative_scan(
+            lambda l, r: (l[0] * r[0], r[0] * l[1] + r[1]), (a, b), axis=1
+        )
+        out_h = bb
+        w1 = cfg.rglru_conv_width - 1
+        new_state = {"conv": u_raw[:, -w1:].astype(jnp.float32), "h": bb[:, -1]}
+    out = (out_h * g.astype(jnp.float32)).astype(x.dtype) @ p["w_o"]
+    out = sharding.act(out, "batch", "seq", "dmodel")
+    if return_state:
+        return out, new_state
+    return out
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int):
+    return {
+        "conv": jnp.zeros((batch, cfg.rglru_conv_width - 1, cfg.d_model), jnp.float32),
+        "h": jnp.zeros((batch, cfg.d_model), jnp.float32),
+    }
+
+
+def rglru_block_decode(p, cfg: ModelConfig, x, state):
+    return rglru_block(p, cfg, x, state=state, return_state=True)

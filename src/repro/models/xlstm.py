@@ -1,0 +1,308 @@
+"""xLSTM blocks (Beck et al., arXiv:2405.04517): mLSTM and sLSTM.
+
+mLSTM (matrix memory, exponential gating) is computed in the TPU-native
+*chunkwise-parallel* form: quadratic attention-like compute inside fixed-size
+chunks, a recurrent (C, n, m)-state scan across chunks -- linear memory in
+sequence length, MXU-friendly matmuls inside chunks.  Decode uses the O(1)
+recurrent update.  sLSTM has true recurrence (hidden-state feedback into the
+gates), so training scans over time steps.
+
+Both are validated against naive per-timestep references in tests/.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import (analysis_unroll, dense_init, head_rmsnorm,
+                                 rmsnorm, split_keys)
+from repro.parallel import sharding
+
+
+# ------------------------------------------------------------- mLSTM core math
+
+def mlstm_chunkwise(q, k, v, ig, fg, chunk: int, state=None):
+    """q,k,v: (B,S,H,dh); ig,fg: (B,S,H) raw gate pre-activations.
+    Returns (out (B,S,H,dh), final_state (C,n,m))."""
+    B, S, H, dh = q.shape
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    scale = dh ** -0.5
+
+    def to_chunks(x):
+        return x.reshape(B, nc, chunk, *x.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc = to_chunks(q * scale), to_chunks(k), to_chunks(v)
+    igc, fgc = to_chunks(ig), to_chunks(fg)  # (nc, B, L, H)
+
+    if state is None:
+        C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+        n0 = jnp.zeros((B, H, dh), jnp.float32)
+        m0 = jnp.full((B, H), -1e30, jnp.float32)
+        state = (C0, n0, m0)
+
+    def chunk_step(carry, xs):
+        C, n, m = carry
+        qq, kk, vv, ii, ff = xs  # (B,L,H,dh) / (B,L,H)
+        qq = qq.astype(jnp.float32)
+        kk = kk.astype(jnp.float32)
+        vv = vv.astype(jnp.float32)
+        logf = jax.nn.log_sigmoid(ff.astype(jnp.float32))   # (B,L,H)
+        ii = ii.astype(jnp.float32)
+        F = jnp.cumsum(logf, axis=1)                        # (B,L,H)
+        Ftot = F[:, -1]                                     # (B,H)
+
+        # Stabilizers.
+        g_intra = F[:, :, None, :] - F[:, None, :, :] + ii[:, None, :, :]  # (B,t,s,H)
+        L = qq.shape[1]
+        tri = (jnp.arange(L)[:, None] >= jnp.arange(L)[None, :])[None, :, :, None]
+        g_intra = jnp.where(tri, g_intra, -jnp.inf)
+        m_intra = jnp.max(g_intra, axis=2)                   # (B,t,H)
+        m_inter = F + m[:, None, :]                          # (B,t,H)
+        m_t = jnp.maximum(m_intra, m_inter)                  # (B,t,H)
+        m_t = jnp.maximum(m_t, -1e30)
+
+        D = jnp.exp(g_intra - m_t[:, :, None, :])            # (B,t,s,H)
+        D = jnp.where(tri, D, 0.0)
+        scores = jnp.einsum("bthd,bshd->btsh", qq, kk) * D   # (B,t,s,H)
+        intra = jnp.einsum("btsh,bshd->bthd", scores, vv)
+        inter_w = jnp.exp(m_inter - m_t)                     # (B,t,H)
+        inter = jnp.einsum("bthd,bhde->bthe", qq, C) * inter_w[..., None]
+        num = intra + inter
+
+        l_intra = jnp.sum(scores, axis=2)                    # (B,t,H)
+        l_inter = jnp.einsum("bthd,bhd->bth", qq, n) * inter_w
+        denom = jnp.maximum(jnp.abs(l_intra + l_inter), jnp.exp(-m_t)) + 1e-6
+        out = num / denom[..., None]
+
+        # State update to the end of the chunk.
+        g_state = Ftot[:, None, :] - F + ii                  # (B,s,H)
+        m_new = jnp.maximum(Ftot + m, jnp.max(g_state, axis=1))
+        w_old = jnp.exp(Ftot + m - m_new)                    # (B,H)
+        w_s = jnp.exp(g_state - m_new[:, None, :])           # (B,s,H)
+        C_new = C * w_old[:, :, None, None] + jnp.einsum(
+            "bshd,bshe,bsh->bhde", kk, vv, w_s)
+        n_new = n * w_old[..., None] + jnp.einsum("bshd,bsh->bhd", kk, w_s)
+        return (C_new, n_new, m_new), out
+
+    state, outs = jax.lax.scan(chunk_step, state, (qc, kc, vc, igc, fgc), unroll=analysis_unroll(nc))
+    out = outs.swapaxes(0, 1).reshape(B, S, H, dh)
+    return out, state
+
+
+def mlstm_recurrent_step(q, k, v, ig, fg, state):
+    """One-token recurrent update. q,k,v: (B,H,dh); ig,fg: (B,H)."""
+    C, n, m = state
+    q = q.astype(jnp.float32) * (q.shape[-1] ** -0.5)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(fg.astype(jnp.float32))
+    ii = ig.astype(jnp.float32)
+    m_new = jnp.maximum(logf + m, ii)
+    fw = jnp.exp(logf + m - m_new)
+    iw = jnp.exp(ii - m_new)
+    C = C * fw[..., None, None] + jnp.einsum("bhd,bhe,bh->bhde", k, v, iw)
+    n = n * fw[..., None] + k * iw[..., None]
+    num = jnp.einsum("bhd,bhde->bhe", q, C)
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n)), jnp.exp(-m_new)) + 1e-6
+    return num / denom[..., None], (C, n, m_new)
+
+
+# ------------------------------------------------------------------ mLSTM block
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv. x: (B,S,Dn), w: (width, Dn).
+    With `state` (B,width-1,Dn): single-step mode (S==1)."""
+    width = w.shape[0]
+    if state is not None:
+        window = jnp.concatenate([state, x], axis=1)         # (B,width,Dn)
+        out = jnp.einsum("bwd,wd->bd", window, w)[:, None]
+        return out, window[:, 1:]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + x.shape[1]] * w[i] for i in range(width))
+    return out, None
+
+
+def init_mlstm_block(key, cfg: ModelConfig, dtype):
+    D = cfg.d_model
+    Din = 2 * D
+    H = cfg.num_heads
+    dh = Din // H
+    ks = split_keys(key, 9)
+    return {
+        "ln": jnp.zeros((D,), dtype),
+        "w_up": dense_init(ks[0], (D, Din), dtype),
+        "w_gate_up": dense_init(ks[1], (D, Din), dtype),
+        "conv_w": dense_init(ks[2], (4, Din), dtype, scale=0.5),
+        # block-diagonal per-head q/k/v projections
+        "wq": dense_init(ks[3], (H, dh, dh), dtype, scale=dh ** -0.5),
+        "wk": dense_init(ks[4], (H, dh, dh), dtype, scale=dh ** -0.5),
+        "wv": dense_init(ks[5], (H, dh, dh), dtype, scale=dh ** -0.5),
+        "w_ig": dense_init(ks[6], (Din, H), dtype, scale=0.01),
+        "w_fg": dense_init(ks[7], (Din, H), dtype, scale=0.01),
+        "b_fg": jnp.full((H,), 3.0, dtype),  # forget-gate bias: remember by default
+        "gn": jnp.zeros((H, dh), dtype),
+        "w_down": dense_init(ks[8], (Din, D), dtype, scale=Din ** -0.5),
+    }
+
+
+def _mlstm_qkvg(p, cfg, u_conv, u):
+    B, S, Din = u.shape
+    H = cfg.num_heads
+    dh = Din // H
+    ch = u_conv.reshape(B, S, H, dh)
+    uh = u.reshape(B, S, H, dh)
+    q = jnp.einsum("bshd,hde->bshe", ch, p["wq"])
+    k = jnp.einsum("bshd,hde->bshe", ch, p["wk"])
+    v = jnp.einsum("bshd,hde->bshe", uh, p["wv"])
+    ig = u_conv @ p["w_ig"]
+    fg = u_conv @ p["w_fg"] + p["b_fg"]
+    return q, k, v, ig, fg
+
+
+def mlstm_block(p, cfg: ModelConfig, x):
+    B, S, D = x.shape
+    h = rmsnorm(x, p["ln"])
+    u = h @ p["w_up"]
+    g = h @ p["w_gate_up"]
+    u = sharding.act(u, "batch", "seq", "ff")
+    uc, _ = _causal_conv(u, p["conv_w"])
+    uc = jax.nn.silu(uc)
+    q, k, v, ig, fg = _mlstm_qkvg(p, cfg, uc, u)
+    out, _ = mlstm_chunkwise(q, k, v, ig, fg, cfg.mlstm_chunk)
+    out = head_rmsnorm(out, p["gn"])
+    out = out.reshape(B, S, -1) * jax.nn.silu(g)
+    out = out.astype(x.dtype) @ p["w_down"]
+    return sharding.act(out, "batch", "seq", "dmodel")
+
+
+def mlstm_block_prefill(p, cfg: ModelConfig, x):
+    """Full-sequence mLSTM that also emits the recurrent decode state."""
+    B, S, D = x.shape
+    h = rmsnorm(x, p["ln"])
+    u = h @ p["w_up"]
+    g = h @ p["w_gate_up"]
+    u = sharding.act(u, "batch", "seq", "ff")
+    uc, _ = _causal_conv(u, p["conv_w"])
+    uc = jax.nn.silu(uc)
+    q, k, v, ig, fg = _mlstm_qkvg(p, cfg, uc, u)
+    out, (C, n, m) = mlstm_chunkwise(q, k, v, ig, fg, cfg.mlstm_chunk)
+    out = head_rmsnorm(out, p["gn"])
+    out = out.reshape(B, S, -1) * jax.nn.silu(g)
+    out = out.astype(x.dtype) @ p["w_down"]
+    out = sharding.act(out, "batch", "seq", "dmodel")
+    state = {"conv": u[:, -3:].astype(jnp.float32), "C": C, "n": n, "m": m}
+    return out, state
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int):
+    Din = 2 * cfg.d_model
+    H = cfg.num_heads
+    dh = Din // H
+    return {
+        "conv": jnp.zeros((batch, 3, Din), jnp.float32),
+        "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+    }
+
+
+def mlstm_block_decode(p, cfg: ModelConfig, x, state):
+    """x: (B,1,D)."""
+    B = x.shape[0]
+    h = rmsnorm(x, p["ln"])
+    u = h @ p["w_up"]
+    g = h @ p["w_gate_up"]
+    uc, conv_state = _causal_conv(u, p["conv_w"], state["conv"].astype(u.dtype))
+    uc = jax.nn.silu(uc)
+    q, k, v, ig, fg = _mlstm_qkvg(p, cfg, uc, u)
+    out, (C, n, m) = mlstm_recurrent_step(
+        q[:, 0], k[:, 0], v[:, 0], ig[:, 0], fg[:, 0], (state["C"], state["n"], state["m"])
+    )
+    out = head_rmsnorm(out[:, None], p["gn"])  # (B,1,H,dh)
+    out = out.reshape(B, 1, -1) * jax.nn.silu(g)
+    out = out.astype(x.dtype) @ p["w_down"]
+    new_state = {"conv": conv_state.astype(jnp.float32), "C": C, "n": n, "m": m}
+    return out, new_state
+
+
+# ------------------------------------------------------------------ sLSTM block
+
+def init_slstm_block(key, cfg: ModelConfig, dtype):
+    D = cfg.d_model
+    H = cfg.num_heads
+    dh = D // H
+    F = (4 * D) // 3
+    F = ((F + 63) // 64) * 64  # round for shardability
+    ks = split_keys(key, 11)
+    p = {"ln": jnp.zeros((D,), dtype)}
+    for i, gate in enumerate(("i", "f", "z", "o")):
+        p[f"w_{gate}"] = dense_init(ks[i], (D, D), dtype)
+        p[f"r_{gate}"] = dense_init(ks[4 + i], (H, dh, dh), dtype, scale=dh ** -0.5)
+        p[f"b_{gate}"] = (jnp.full((D,), 1.0, dtype) if gate == "f" else jnp.zeros((D,), dtype))
+    p["gn"] = jnp.zeros((H, dh), dtype)
+    p["ffn_up"] = dense_init(ks[8], (D, 2 * F), dtype)
+    p["ffn_down"] = dense_init(ks[9], (F, D), dtype, scale=F ** -0.5)
+    p["w_out"] = dense_init(ks[10], (D, D), dtype, scale=D ** -0.5)
+    return p
+
+
+def _slstm_step(p, cfg, carry, gates_x):
+    """carry: dict(h,c,n,m) each (B,H,dh); gates_x: dict of (B,D) pre-activations."""
+    B = carry["h"].shape[0]
+    H = cfg.num_heads
+    dh = cfg.d_model // H
+
+    def rec(gate):
+        return (gates_x[gate].reshape(B, H, dh)
+                + jnp.einsum("bhd,hde->bhe", carry["h"], p[f"r_{gate}"]).astype(jnp.float32))
+
+    it, ft, zt, ot = rec("i"), rec("f"), rec("z"), rec("o")
+    logf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(logf + carry["m"], it)
+    iw = jnp.exp(it - m_new)
+    fw = jnp.exp(logf + carry["m"] - m_new)
+    c = fw * carry["c"] + iw * jnp.tanh(zt)
+    n = fw * carry["n"] + iw
+    h = jax.nn.sigmoid(ot) * c / jnp.maximum(n, 1e-6)
+    return {"h": h, "c": c, "n": n, "m": m_new}
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int):
+    H = cfg.num_heads
+    dh = cfg.d_model // H
+    z = jnp.zeros((batch, H, dh), jnp.float32)
+    return {"h": z, "c": z, "n": z, "m": jnp.full((batch, H, dh), -1e30, jnp.float32)}
+
+
+def slstm_block(p, cfg: ModelConfig, x, state=None, return_state=False):
+    B, S, D = x.shape
+    hln = rmsnorm(x, p["ln"])
+    gates = {g: (hln @ p[f"w_{g}"] + p[f"b_{g}"]).astype(jnp.float32) for g in "ifzo"}
+    carry = state if state is not None else init_slstm_state(cfg, B)
+
+    def step(c, xs):
+        new = _slstm_step(p, cfg, c, xs)
+        return new, new["h"]
+
+    carry, hs = jax.lax.scan(step, carry, jax.tree.map(lambda a: a.swapaxes(0, 1), gates))
+    hs = hs.swapaxes(0, 1).reshape(B, S, cfg.num_heads, -1)   # (B,S,H,dh)
+    out = head_rmsnorm(hs, p["gn"]).reshape(B, S, D).astype(x.dtype)
+    out = out @ p["w_out"]
+    # post-up-projection FFN (GeGLU 4/3)
+    y = out + x
+    gu = rmsnorm(y, p["ln"]) @ p["ffn_up"]
+    a, b = jnp.split(gu, 2, axis=-1)
+    ffn = (jax.nn.gelu(a) * b) @ p["ffn_down"]
+    res = out + ffn
+    res = sharding.act(res, "batch", "seq", "dmodel")
+    if return_state:
+        return res, carry
+    return res
+
+
+def slstm_block_decode(p, cfg: ModelConfig, x, state):
+    out, new_state = slstm_block(p, cfg, x, state=state, return_state=True)
+    return out, new_state

@@ -1,0 +1,191 @@
+"""Logical-axis sharding rules (DP / FSDP / TP / EP / SP).
+
+Models annotate activations with *logical* axis names; the active `AxisRules`
+maps logical names to mesh axes.  Parameters get PartitionSpecs from their tree
+path + shape via `param_spec`.  Everything is a no-op when no mesh is active,
+so the same model code runs in single-device smoke tests and in the 512-chip
+dry-run.
+
+Baseline strategy (see DESIGN.md):
+  batch    -> ("pod", "data")     pure DP across pods, DP within pod
+  d_ff / heads / vocab / experts -> "model"   (TP / EP)
+  fsdp     -> "data"              parameters additionally sharded over data
+  seq      -> optionally "model"  (sequence parallelism for long contexts)
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisRules:
+    batch: tuple | str | None = ("pod", "data")
+    seq: str | None = None            # "model" => sequence parallelism
+    dmodel: str | None = None
+    heads: str | None = "model"
+    ff: str | None = "model"
+    vocab: str | None = "model"
+    expert: str | None = "model"
+    fsdp: str | None = "data"         # param dim sharded over data axis
+    kv_len: str | None = None         # decode: KV-cache length axis
+
+    def resolve(self, name: str | None):
+        if name is None:
+            return None
+        return getattr(self, name)
+
+
+_STATE = threading.local()
+
+
+def _get():
+    if not hasattr(_STATE, "mesh"):
+        _STATE.mesh, _STATE.rules = None, AxisRules()
+    return _STATE
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh | None, rules: AxisRules | None = None):
+    st = _get()
+    prev = (st.mesh, st.rules)
+    st.mesh = mesh
+    st.rules = rules or AxisRules()
+    try:
+        yield
+    finally:
+        st.mesh, st.rules = prev
+
+
+def current_mesh() -> Mesh | None:
+    return _get().mesh
+
+
+def current_rules() -> AxisRules:
+    return _get().rules
+
+
+def _filter_spec(mesh: Mesh, spec_axes: tuple) -> P:
+    """Drop axes not present in the mesh (e.g. 'pod' on the single-pod mesh),
+    and de-duplicate mesh axes across dims with rightmost-dim priority (under
+    sequence parallelism both 'seq' and 'ff'/'heads' may map to 'model'; the
+    inner/TP dim wins)."""
+    names = set(mesh.axis_names)
+
+    def ok(a):
+        if a is None:
+            return None
+        if isinstance(a, (tuple, list)):
+            kept = tuple(x for x in a if x in names)
+            return kept if kept else None
+        return a if a in names else None
+
+    axes = [ok(a) for a in spec_axes]
+    used: set = set()
+    for i in range(len(axes) - 1, -1, -1):  # rightmost wins
+        a = axes[i]
+        if a is None:
+            continue
+        flat = tuple(a) if isinstance(a, tuple) else (a,)
+        if any(x in used for x in flat):
+            kept = tuple(x for x in flat if x not in used)
+            axes[i] = kept if kept else None
+            flat = kept
+        used.update(flat)
+    return P(*axes)
+
+
+def act(x, *logical_axes):
+    """Constrain an activation's sharding by logical axis names (None = any)."""
+    st = _get()
+    if st.mesh is None:
+        return x
+    axes = tuple(st.rules.resolve(a) for a in logical_axes)
+    spec = _filter_spec(st.mesh, axes)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(st.mesh, spec))
+
+
+def batch_axes_for(size: int):
+    """Mesh axes for a batch dim of `size` under the current rules, or None
+    when the size doesn't divide the axes (e.g. global_batch=1 long-context)."""
+    st = _get()
+    if st.mesh is None:
+        return None
+    dp = _filter_spec(st.mesh, (st.rules.batch,))[0]
+    if dp is None:
+        return None
+    axes = dp if isinstance(dp, (tuple, list)) else (dp,)
+    total = 1
+    for a in axes:
+        total *= st.mesh.shape[a]
+    return dp if total and size % total == 0 else None
+
+
+# --- parameter specs -------------------------------------------------------------
+
+def _divides(mesh: Mesh, axis, size: int) -> bool:
+    if axis is None:
+        return False
+    if isinstance(axis, (tuple, list)):
+        total = 1
+        for a in axis:
+            if a in mesh.shape:
+                total *= mesh.shape[a]
+        return total > 0 and size % total == 0
+    return axis in mesh.shape and size % mesh.shape[axis] == 0
+
+
+def param_spec(path: str, shape: tuple, mesh: Mesh, rules: AxisRules,
+               stacked: bool = True) -> P:
+    """PartitionSpec for one parameter leaf.
+
+    `path` is the '/'-joined tree path; `stacked` params carry a leading
+    layer-stack dim (never sharded).  Policy: the tensor-parallel dim follows
+    the leaf's role (ff/heads/vocab/expert), the other large dim is FSDP-sharded
+    over the data axis when divisible.
+    """
+    dims: list = [None] * len(shape)
+    start = 1 if stacked and len(shape) > 1 else 0
+    body = list(range(start, len(shape)))
+    if not body:
+        return P(*dims)
+
+    lname = path.lower()
+
+    def assign(idx: int, logical: str) -> bool:
+        ax = rules.resolve(logical)
+        if ax is not None and dims[idx] is None and _divides(mesh, ax, shape[idx]):
+            dims[idx] = ax
+            return True
+        return False
+
+    # Role-specific TP axis.
+    if "embed" in lname or "unembed" in lname or "lm_head" in lname:
+        assign(body[0], "vocab")                  # (V, D) vocab-sharded
+    elif "expert" in lname and len(body) >= 2:
+        assign(body[0], "expert")                 # (E, ...) expert-parallel
+        # FSDP the reduction dim of the expert matrices.
+        if len(body) >= 3:
+            assign(body[1], "fsdp")
+    elif len(body) >= 2:
+        assign(body[-1], "ff" if ("mlp" in lname or "ffn" in lname or "up" in lname
+                                  or "gate" in lname) else "heads")
+        assign(body[0], "fsdp")
+    elif len(body) == 1 and shape[body[0]] >= 1024:
+        assign(body[0], "fsdp")
+    return P(*dims)
+
+
+def tree_param_specs(shapes_tree, mesh: Mesh, rules: AxisRules):
+    """Map a pytree of ShapeDtypeStructs to NamedShardings."""
+    paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(shapes_tree)
+    specs = []
+    for path, leaf in paths_leaves:
+        pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        specs.append(NamedSharding(mesh, param_spec(pstr, leaf.shape, mesh, rules)))
+    return jax.tree_util.tree_unflatten(treedef, specs)

@@ -1,0 +1,112 @@
+"""GP regression/classification numerics and BO behaviour."""
+
+import numpy as np
+import pytest
+
+from repro.core import (GP, GPClassifier, RandomForestSurrogate, bo_maximize,
+                        expected_improvement, lcb, random_search)
+from repro.core.trees import GradientBoostedTrees
+
+
+def test_gp_interpolates_noiseless():
+    rng = np.random.default_rng(0)
+    X = rng.uniform(-2, 2, size=(24, 3))
+    y = np.sin(X[:, 0]) + 0.5 * X[:, 1] ** 2
+    gp = GP(kind="se", noisy=False).fit(X, y)
+    mu, var = gp.posterior(X)
+    assert np.max(np.abs(mu - y)) < 1e-2
+    assert np.max(var) < 1e-2
+
+
+def test_gp_linear_recovers_linear_fn():
+    rng = np.random.default_rng(1)
+    X = rng.normal(size=(40, 5))
+    w = np.array([1.0, -2.0, 0.5, 0.0, 3.0])
+    y = X @ w
+    gp = GP(kind="linear", noisy=False).fit(X, y)
+    Xs = rng.normal(size=(20, 5))
+    mu, _ = gp.posterior(Xs)
+    assert np.corrcoef(mu, Xs @ w)[0, 1] > 0.999
+
+
+def test_gp_posterior_variance_grows_off_data():
+    rng = np.random.default_rng(2)
+    X = rng.uniform(0, 1, size=(16, 2))
+    y = X.sum(-1)
+    gp = GP(kind="se", noisy=True).fit(X, y)
+    _, var_near = gp.posterior(X)
+    _, var_far = gp.posterior(np.full((4, 2), 10.0))
+    assert var_far.mean() > var_near.mean() * 5
+
+
+def test_classifier_separates():
+    rng = np.random.default_rng(3)
+    X = rng.normal(size=(60, 2))
+    feas = X[:, 0] > 0
+    clf = GPClassifier().fit(X, feas)
+    p_pos = clf.prob_feasible(np.array([[2.0, 0.0]]))
+    p_neg = clf.prob_feasible(np.array([[-2.0, 0.0]]))
+    assert p_pos[0] > 0.7 > 0.3 > p_neg[0]
+
+
+def test_acquisitions():
+    mu = np.array([0.0, 1.0])
+    var = np.array([1.0, 1e-8])
+    ei = expected_improvement(mu, var, best=0.5)
+    assert ei[0] > 0  # uncertainty gives the worse mean some value
+    assert lcb(mu, var, 2.0)[0] == pytest.approx(2.0)
+
+
+def test_tree_surrogates_fit():
+    rng = np.random.default_rng(4)
+    X = rng.uniform(-1, 1, size=(80, 4))
+    y = np.where(X[:, 0] > 0, 1.0, -1.0) + 0.1 * X[:, 1]
+    rf = RandomForestSurrogate(n_trees=10, seed=0).fit(X, y)
+    mu, var = rf.posterior(X)
+    assert np.mean((mu - y) ** 2) < 0.2
+    gbt = GradientBoostedTrees(n_rounds=20, seed=0).fit(X, y)
+    assert np.mean((gbt.predict(X) - y) ** 2) < 0.1
+
+
+class _QuadraticSpace:
+    """Synthetic constrained maximization problem: maximize -(x-c)^2 subject to
+    a known ball constraint (input) and an unknown half-space constraint."""
+
+    name = "quad"
+    feature_dim = 4
+
+    def __init__(self, seed=0):
+        self.c = np.array([0.3, -0.2, 0.5, 0.1])
+
+    def sample(self, rng):
+        return rng.uniform(-1, 1, 4)
+
+    def is_valid(self, x):
+        return float(np.linalg.norm(x)) <= 1.2  # known constraint
+
+    def features(self, x):
+        return np.asarray(x)
+
+    def evaluate(self, x):
+        if x[0] + x[1] < -0.3:  # unknown constraint
+            return None, False
+        return -float(np.sum((x - self.c) ** 2)), True
+
+
+def test_bo_beats_random_on_synthetic():
+    wins = 0
+    for seed in range(3):
+        space = _QuadraticSpace()
+        r_bo = bo_maximize(space, n_trials=40, n_warmup=10, pool_size=60, surrogate="gp_se", seed=seed)
+        r_rs = random_search(space, n_trials=40, seed=seed)
+        wins += int(r_bo.best_value >= r_rs.best_value)
+    assert wins >= 2
+
+
+def test_bo_records_unknown_constraint_violations():
+    space = _QuadraticSpace()
+    r = bo_maximize(space, n_trials=30, n_warmup=10, pool_size=40, surrogate="gp_se", seed=0)
+    assert r.n_infeasible > 0          # it must have bumped into the hidden wall
+    assert r.best_point is not None
+    assert len(r.history) == 30
+    assert all(b >= a for a, b in zip(r.history, r.history[1:]))  # monotone

@@ -1,0 +1,55 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype/block sweeps (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ref import flash_attention_ref, matmul_ref
+from repro.kernels.tiled_matmul import tiled_matmul
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-4), (jnp.bfloat16, 2e-1)])
+@pytest.mark.parametrize("m,k,n,bm,bk,bn", [
+    (128, 256, 128, 32, 64, 64),
+    (256, 128, 384, 64, 128, 128),
+    (64, 512, 256, 8, 256, 128),
+    (128, 128, 128, 128, 128, 128),   # single block
+])
+def test_tiled_matmul_sweep(m, k, n, bm, bk, bn, dtype, tol):
+    x = jnp.asarray(RNG.normal(size=(m, k)), dtype)
+    w = jnp.asarray(RNG.normal(size=(k, n)), dtype)
+    got = tiled_matmul(x, w, bm=bm, bk=bk, bn=bn, interpret=True)
+    ref = matmul_ref(x, w)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol * k ** 0.5)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-4), (jnp.bfloat16, 5e-2)])
+@pytest.mark.parametrize("B,S,H,KV,hd,bq,bk", [
+    (2, 64, 4, 2, 16, 16, 16),
+    (1, 128, 8, 2, 32, 32, 64),
+    (2, 64, 4, 4, 8, 64, 32),      # MHA (g=1)
+    (1, 128, 4, 1, 64, 128, 128),  # MQA, single block pair
+])
+def test_flash_attention_sweep(B, S, H, KV, hd, bq, bk, dtype, tol):
+    q = jnp.asarray(RNG.normal(size=(B, S, H, hd)), dtype)
+    k = jnp.asarray(RNG.normal(size=(B, S, KV, hd)), dtype)
+    v = jnp.asarray(RNG.normal(size=(B, S, KV, hd)), dtype)
+    got = flash_attention(q, k, v, bq=bq, bk=bk, interpret=True)
+    ref = flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_ops_dispatch_cpu_interpret():
+    from repro.kernels import ops
+    x = jnp.asarray(RNG.normal(size=(64, 128)), jnp.float32)
+    w = jnp.asarray(RNG.normal(size=(128, 128)), jnp.float32)
+    np.testing.assert_allclose(np.asarray(ops.matmul(x, w, bm=32, bk=64, bn=128)),
+                               np.asarray(x @ w), rtol=1e-4, atol=1e-4)
