@@ -3,6 +3,13 @@
 Reports per-model EDP improvement over the hand-designed accelerator (Eyeriss
 + heuristic random mapper, Timeloop-style), the paper's headline table
 (18.3% / 40.2% / 21.8% / 16.0% for ResNet / DQN / MLP / Transformer).
+
+Also benchmarks the batched evaluation engine (`repro.timeloop.batch`) against
+the scalar reference path on the co-design hot loop — per-trial candidate-pool
+sampling + featurization + EDP scoring — and end-to-end on a reduced nested
+co-design run.  `run(..., collect=dict)` fills a JSON-serializable record
+(wall time, best log10 EDP per seed, speedups) that `benchmarks/run.py --json`
+writes to BENCH_codesign.json so the perf trajectory is tracked across PRs.
 """
 
 from __future__ import annotations
@@ -14,23 +21,30 @@ import numpy as np
 from repro.core import codesign
 from repro.core.bo import BOResult
 from repro.core.hwspace import HardwareSpace
+from repro.core.swspace import SoftwareSpace
 from repro.core.baselines import random_search
-from repro.timeloop import MODEL_LAYERS, eyeriss_baseline_edp
+from repro.timeloop import MODEL_LAYERS, eyeriss_baseline_edp, eyeriss_168
+from repro.timeloop import batch as tlb
+from repro.timeloop import evaluate
+from repro.timeloop.mapping import constrained_random_mapping, mapping_is_valid
 
 
 def run_model(model: str, n_hw: int = 12, n_sw: int = 60, seeds=(0,),
-              baseline_budget: int = 4000, hw_search: str = "bo"):
+              baseline_budget: int = 4000, hw_search: str = "bo",
+              engine: str = "batched"):
     layers = MODEL_LAYERS[model]
     num_pes = 256 if model == "transformer" else 168
     base = eyeriss_baseline_edp(layers, num_pes=num_pes, budget=baseline_budget)
     base_total = sum(base.values())
-    bests, curves = [], []
+    batched = engine == "batched"
+    bests, curves, times = [], [], []
     for seed in seeds:
         t0 = time.time()
         if hw_search == "bo":
             res = codesign(layers, num_pes=num_pes, n_hw_trials=n_hw,
                            n_sw_trials=n_sw, n_sw_warmup=min(20, n_sw // 3),
-                           sw_pool=60, hw_pool=60, seed=seed)
+                           sw_pool=60, hw_pool=60, seed=seed,
+                           batched=batched, use_cache=batched)
             bests.append(res.best_model_edp)
             curves.append(res.hw_result.history)
         else:  # constrained random hardware search (paper's HW baseline)
@@ -42,7 +56,8 @@ def run_model(model: str, n_hw: int = 12, n_sw: int = 60, seeds=(0,),
                 for layer in layers:
                     r = optimize_software(hw, layer, n_trials=n_sw,
                                           n_warmup=min(20, n_sw // 3),
-                                          pool_size=60, seed=seed + 1)
+                                          pool_size=60, seed=seed + 1,
+                                          batched=batched)
                     if r.best_point is None:
                         return None, False
                     total += tl_eval(hw, r.best_point, layer).edp
@@ -53,6 +68,7 @@ def run_model(model: str, n_hw: int = 12, n_sw: int = 60, seeds=(0,),
             r = random_search(space, n_trials=n_hw, seed=seed)
             bests.append(getattr(eval_hw, "best", np.inf))
             curves.append(r.history)
+        times.append(time.time() - t0)
     best = float(np.mean(bests))
     return {
         "model": model,
@@ -60,10 +76,79 @@ def run_model(model: str, n_hw: int = 12, n_sw: int = 60, seeds=(0,),
         "codesign_edp": best,
         "improvement_pct": (1 - best / base_total) * 100.0,
         "curve": np.mean(np.asarray(curves, dtype=np.float64), axis=0),
+        "wall_time_s": times,
+        "best_log10_edp_per_seed": [float(np.log10(b)) for b in bests],
+        "engine": engine,
     }
 
 
-def run(n_hw: int = 12, n_sw: int = 60, seeds=(0,), quiet: bool = False):
+def engine_speedup(layers=("ResNet-K2", "DQN-K1", "Transformer-K2"),
+                   pool: int = 150, reps: int = 20, seed: int = 0) -> dict:
+    """Hot-path microbenchmark mirroring exactly one BO acquisition trial:
+    draw an input-valid pool, featurize it, evaluate the acquisition argmax
+    (here: candidate 0 — the surrogate posterior is engine-independent and
+    excluded).  Scalar reference vs batched engine, per layer plus geomean."""
+    from repro.timeloop import PAPER_WORKLOADS
+
+    hw = eyeriss_168()
+    out: dict = {"pool": pool, "reps": reps, "layers": {}}
+    speedups = []
+    for name in layers:
+        layer = PAPER_WORKLOADS[name]
+        space = SoftwareSpace(hw, layer)
+
+        rng = np.random.default_rng(seed)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            cands = []
+            while len(cands) < pool:
+                m = constrained_random_mapping(rng, hw, layer)
+                if mapping_is_valid(m, hw, layer)[0]:
+                    cands.append(m)
+            np.stack([space.features(m) for m in cands])
+            evaluate(hw, cands[0], layer)
+        t_scalar = time.perf_counter() - t0
+
+        rng = np.random.default_rng(seed)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            mb = tlb.sample_valid_pool(rng, hw, layer, pool)
+            tlb.features_batch(mb, hw, layer)
+            evaluate(hw, mb[0], layer)
+        t_batched = time.perf_counter() - t0
+
+        sp = t_scalar / t_batched
+        speedups.append(sp)
+        out["layers"][name] = {
+            "scalar_s": round(t_scalar, 4),
+            "batched_s": round(t_batched, 4),
+            "speedup": round(sp, 2),
+        }
+    out["geomean_speedup"] = round(float(np.exp(np.mean(np.log(speedups)))), 2)
+    return out
+
+
+def e2e_speedup(model: str = "dqn", n_hw: int = 4, n_sw: int = 40,
+                seed: int = 0) -> dict:
+    """End-to-end nested co-design at reduced budgets: batched engine +
+    (hw, layer) cache vs the pre-engine scalar path.  (GP surrogate fits are
+    identical on both sides, so this is bounded well below the raw engine
+    speedup; the hot-path numbers are in `engine_speedup`.)"""
+    layers = MODEL_LAYERS[model]
+    out = {}
+    for engine in ("scalar", "batched"):
+        batched = engine == "batched"
+        t0 = time.perf_counter()
+        codesign(layers, n_hw_trials=n_hw, n_sw_trials=n_sw,
+                 n_sw_warmup=min(20, n_sw // 3), sw_pool=60, hw_pool=60,
+                 seed=seed, batched=batched, use_cache=batched)
+        out[f"{engine}_s"] = round(time.perf_counter() - t0, 3)
+    out["speedup"] = round(out["scalar_s"] / out["batched_s"], 2)
+    return out
+
+
+def run(n_hw: int = 12, n_sw: int = 60, seeds=(0,), quiet: bool = False,
+        collect: dict | None = None):
     out = {}
     for model in ("resnet", "dqn", "mlp", "transformer"):
         r = run_model(model, n_hw=n_hw, n_sw=n_sw, seeds=seeds)
@@ -71,8 +156,36 @@ def run(n_hw: int = 12, n_sw: int = 60, seeds=(0,), quiet: bool = False):
         if not quiet:
             print(f"fig5a,{model},eyeriss={r['eyeriss_edp']:.3e},"
                   f"codesign={r['codesign_edp']:.3e},"
-                  f"improvement={r['improvement_pct']:.1f}%")
+                  f"improvement={r['improvement_pct']:.1f}%,"
+                  f"time={sum(r['wall_time_s']):.1f}s")
+        if collect is not None:
+            collect.setdefault("codesign", {})[model] = {
+                "eyeriss_edp": _finite(r["eyeriss_edp"]),
+                "codesign_edp": _finite(r["codesign_edp"]),
+                "improvement_pct": _finite(round(r["improvement_pct"], 2)),
+                "wall_time_s": [round(t, 3) for t in r["wall_time_s"]],
+                "best_log10_edp_per_seed": [
+                    _finite(b) for b in r["best_log10_edp_per_seed"]
+                ],
+                "seeds": list(seeds),
+            }
     return out
+
+
+def _finite(x: float):
+    """JSON-safe number: strict JSON has no Infinity/NaN token, so non-finite
+    values (e.g. a seed with no feasible design) become null."""
+    return float(x) if np.isfinite(x) else None
+
+
+def print_speedups(eng: dict, e2e: dict) -> None:
+    """CSV lines for the engine/e2e speedup records (shared with run.py)."""
+    for name, r in eng["layers"].items():
+        print(f"engine,{name},scalar={r['scalar_s']}s,"
+              f"batched={r['batched_s']}s,speedup={r['speedup']}x")
+    print(f"engine,geomean,speedup={eng['geomean_speedup']}x")
+    print(f"e2e,codesign,scalar={e2e['scalar_s']}s,"
+          f"batched={e2e['batched_s']}s,speedup={e2e['speedup']}x")
 
 
 if __name__ == "__main__":
@@ -81,8 +194,12 @@ if __name__ == "__main__":
     ap.add_argument("--paper", action="store_true",
                     help="paper-scale budgets (50 HW x 250 SW)")
     ap.add_argument("--hw-search", default="bo", choices=("bo", "random"))
+    ap.add_argument("--speedup", action="store_true",
+                    help="only run the batched-engine speedup benchmarks")
     args = ap.parse_args()
-    if args.paper:
+    if args.speedup:
+        print_speedups(engine_speedup(), e2e_speedup())
+    elif args.paper:
         run(n_hw=50, n_sw=250, seeds=(0, 1, 2))
     else:
         run()

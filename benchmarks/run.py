@@ -3,22 +3,33 @@ summary.  Prints `name,metric,...` CSV lines.
 
     PYTHONPATH=src python -m benchmarks.run            # reduced budgets
     PYTHONPATH=src python -m benchmarks.run --paper    # paper-scale budgets
+    PYTHONPATH=src python -m benchmarks.run --json     # also write BENCH_codesign.json
+
+`--json` records the co-design section's wall time and best log10 EDP per seed,
+plus the batched-engine speedup over the scalar path, to BENCH_codesign.json so
+the perf trajectory is tracked across PRs.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--paper", action="store_true")
+    ap.add_argument("--json", action="store_true",
+                    help="write BENCH_codesign.json (wall time, best log10 EDP "
+                         "per seed, engine speedups)")
     args, _ = ap.parse_known_args()
 
     from benchmarks import bo_ablation, bo_codesign, bo_software, roofline
 
     t0 = time.time()
+    collect: dict | None = {} if args.json else None
+
     print("# Fig. 3 -- software-mapping optimization (best log10 EDP, lower wins)")
     bo_software.run(n_trials=250 if args.paper else 100,
                     seeds=tuple(range(3)) if args.paper else (0, 1))
@@ -30,9 +41,14 @@ def main() -> None:
 
     print("# Fig. 4 / 5a -- HW/SW co-design vs Eyeriss")
     if args.paper:
-        bo_codesign.run(n_hw=50, n_sw=250, seeds=(0, 1, 2))
+        bo_codesign.run(n_hw=50, n_sw=250, seeds=(0, 1, 2), collect=collect)
     else:
-        bo_codesign.run(n_hw=12, n_sw=60, seeds=(0,))
+        bo_codesign.run(n_hw=12, n_sw=60, seeds=(0,), collect=collect)
+
+    print("# batched engine -- hot-path + end-to-end speedup vs scalar path")
+    eng = bo_codesign.engine_speedup()
+    e2e = bo_codesign.e2e_speedup()
+    bo_codesign.print_speedups(eng, e2e)
 
     print("# Fig. 5b/5c -- surrogate/acquisition + lambda ablations")
     bo_ablation.run(n_trials=250 if args.paper else 80,
@@ -43,7 +59,17 @@ def main() -> None:
     if s:
         print(f"roofline,summary,{s}")
 
-    print(f"# total {time.time() - t0:.0f}s")
+    total = time.time() - t0
+    if collect is not None:
+        collect["engine_speedup"] = eng
+        collect["e2e_speedup"] = e2e
+        collect["paper_budgets"] = bool(args.paper)
+        collect["total_s"] = round(total, 1)
+        with open("BENCH_codesign.json", "w") as f:
+            json.dump(collect, f, indent=2, sort_keys=True)
+        print("# wrote BENCH_codesign.json")
+
+    print(f"# total {total:.0f}s")
 
 
 if __name__ == "__main__":

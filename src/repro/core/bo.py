@@ -9,6 +9,13 @@ The loop implements the paper's scheme exactly:
   * optimize the acquisition by rejection sampling: pool `pool_size` candidates
     that satisfy all input constraints, pick the acquisition argmax,
   * evaluate, record, repeat for `n_trials`.
+
+Spaces may implement the *batched evaluation protocol* — `supports_batch`
+(truthy), `sample_pool(rng, n)`, `features_batch(pool)`, `evaluate_batch(pool)`
+(see `repro.timeloop.batch`) — in which case warmup draws and the per-trial
+acquisition pool are sampled, featurized, and scored as whole arrays instead of
+one candidate at a time; spaces without it (e.g. the hardware space, whose
+evaluator is a nested search) transparently fall back to the scalar path.
 """
 
 from __future__ import annotations
@@ -61,9 +68,11 @@ def bo_maximize(
     feas_all: list[bool] = []
     result = BOResult(None, -np.inf, [], [], [])
 
-    def observe(point):
-        feats = space.features(point)
-        value, feasible = space.evaluate(point)
+    use_batch = bool(getattr(space, "supports_batch", False))
+
+    def observe(point, feats=None, outcome=None):
+        feats = space.features(point) if feats is None else feats
+        value, feasible = space.evaluate(point) if outcome is None else outcome
         X_all.append(feats)
         feas_all.append(feasible)
         result.points.append(point)
@@ -87,9 +96,25 @@ def bo_maximize(
                 return p
         raise InfeasibleSpace(getattr(space, "name", "space"))
 
+    def sample_valid_pool(n):
+        """Input-valid candidate pool as a packed batch (batched protocol)."""
+        pool = space.sample_pool(rng, n)
+        if pool is None:
+            raise InfeasibleSpace(getattr(space, "name", "space"))
+        return pool
+
     # --- warmup ---------------------------------------------------------------
-    for _ in range(min(n_warmup, n_trials)):
-        observe(sample_valid())
+    n_warm = min(n_warmup, n_trials)
+    if use_batch and n_warm:
+        warm = sample_valid_pool(n_warm)
+        warm_feats = space.features_batch(warm)
+        warm_vals, warm_feas = space.evaluate_batch(warm)
+        for i in range(n_warm):
+            observe(warm[i], feats=warm_feats[i],
+                    outcome=(warm_vals[i], bool(warm_feas[i])))
+    else:
+        for _ in range(n_warm):
+            observe(sample_valid())
 
     model = None
     classifier = None
@@ -111,18 +136,23 @@ def bo_maximize(
                 classifier = None
 
         if model is None:  # not enough feasible data yet -> keep sampling
-            observe(sample_valid())
+            observe(sample_valid_pool(1)[0] if use_batch else sample_valid())
             if callback:
                 callback(t, result)
             continue
 
-        pool = [sample_valid() for _ in range(pool_size)]
-        feats = np.stack([space.features(p) for p in pool])
+        if use_batch:
+            pool = sample_valid_pool(pool_size)
+            feats = space.features_batch(pool)
+        else:
+            pool = [sample_valid() for _ in range(pool_size)]
+            feats = np.stack([space.features(p) for p in pool])
         mu, var = model.posterior(feats)
         utility = acq(mu, var, result.best_value)
         if classifier is not None:
             utility = utility * classifier.prob_feasible(feats)
-        observe(pool[int(np.argmax(utility))])
+        i_best = int(np.argmax(utility))
+        observe(pool[i_best], feats=feats[i_best])
         if callback:
             callback(t, result)
 

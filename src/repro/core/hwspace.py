@@ -39,6 +39,9 @@ class HardwareSpace:
     # evaluate_fn(hw) -> (utility | None, feasible); injected by the nested driver.
     evaluate_fn: Callable[[HardwareConfig], tuple[float | None, bool]] | None = None
     name: str = "hardware"
+    # Evaluating one hardware point is a full inner software search, so there is
+    # nothing to vectorize at this level: the BO loop takes its scalar path.
+    supports_batch: bool = False
 
     @property
     def feature_dim(self) -> int:

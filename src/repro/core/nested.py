@@ -43,8 +43,9 @@ def optimize_software(
     lam: float = 1.0,
     surrogate: str = "gp_linear",
     seed: int = 0,
+    batched: bool = True,
 ) -> BOResult:
-    space = SoftwareSpace(hw, layer)
+    space = SoftwareSpace(hw, layer, batched=batched)
     try:
         return bo_maximize(
             space,
@@ -77,9 +78,33 @@ def codesign(
     surrogate: str = "gp_linear",
     seed: int = 0,
     verbose: bool = False,
+    batched: bool = True,
+    use_cache: bool = True,
 ) -> CoDesignResult:
     inner_seed = [seed * 7919]
     best = {"edp": np.inf, "hw": None, "maps": None, "per_layer": None}
+    # (hw, layer) -> (best mapping | None, edp).  The outer BO routinely
+    # re-probes hardware points (acquisition argmax over a sampled pool repeats
+    # configs, and pool candidates collide across trials); both are frozen
+    # dataclasses, so the pair keys a dict and a hit skips the whole inner
+    # 250-trial search.  The inner search is stochastic, so caching also makes
+    # repeated probes of one hardware point consistent.
+    inner_cache: dict[tuple[HardwareConfig, ConvLayer], tuple[Mapping | None, float]] = {}
+
+    def best_mapping(hw: HardwareConfig, layer: ConvLayer) -> tuple[Mapping | None, float]:
+        key = (hw, layer)
+        if not use_cache or key not in inner_cache:
+            r = optimize_software(
+                hw, layer,
+                n_trials=n_sw_trials, n_warmup=n_sw_warmup, pool_size=sw_pool,
+                acquisition=acquisition, lam=lam, surrogate=surrogate,
+                seed=inner_seed[0], batched=batched,
+            )
+            if r.best_point is None:
+                inner_cache[key] = (None, float("inf"))
+            else:
+                inner_cache[key] = (r.best_point, evaluate(hw, r.best_point, layer).edp)
+        return inner_cache[key]
 
     def eval_hw(hw: HardwareConfig):
         inner_seed[0] += 1
@@ -87,18 +112,12 @@ def codesign(
         maps: dict[str, Mapping] = {}
         per_layer: dict[str, float] = {}
         for layer in layers:
-            r = optimize_software(
-                hw, layer,
-                n_trials=n_sw_trials, n_warmup=n_sw_warmup, pool_size=sw_pool,
-                acquisition=acquisition, lam=lam, surrogate=surrogate,
-                seed=inner_seed[0],
-            )
-            if r.best_point is None:
+            m, edp = best_mapping(hw, layer)
+            if m is None:
                 return None, False  # unknown constraint: no feasible mapping found
-            ev = evaluate(hw, r.best_point, layer)
-            total_edp += ev.edp
-            maps[layer.name] = r.best_point
-            per_layer[layer.name] = ev.edp
+            total_edp += edp
+            maps[layer.name] = m
+            per_layer[layer.name] = edp
         if total_edp < best["edp"]:
             best.update(edp=total_edp, hw=hw, maps=maps, per_layer=per_layer)
         if verbose:

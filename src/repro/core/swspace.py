@@ -4,6 +4,11 @@ All constraints are *known* here (hardware and layer are fixed), so the sampler
 enforces them as input constraints; the evaluator is deterministic, so the GP
 uses no noise kernel.  Features follow Fig. 13 plus order-sensitive log trip
 counts, which give the linear kernel direct visibility into the reuse structure.
+
+The space implements the BO loop's batched evaluation protocol on top of
+`repro.timeloop.batch`: whole candidate pools are sampled, featurized, and
+scored as packed arrays (set `batched=False` to force the scalar reference
+path, e.g. for speedup benchmarking).
 """
 
 from __future__ import annotations
@@ -12,6 +17,7 @@ import dataclasses
 
 import numpy as np
 
+from repro.timeloop import batch as tlb
 from repro.timeloop.arch import HardwareConfig
 from repro.timeloop.mapping import (
     Mapping,
@@ -46,10 +52,15 @@ class SoftwareSpace:
     hw: HardwareConfig
     layer: ConvLayer
     name: str = "software"
+    batched: bool = True  # expose the batched protocol to the BO loop
 
     @property
     def feature_dim(self) -> int:
         return len(FEATURE_NAMES)
+
+    @property
+    def supports_batch(self) -> bool:
+        return self.batched
 
     def sample(self, rng) -> Mapping:
         return constrained_random_mapping(rng, self.hw, self.layer)
@@ -89,3 +100,22 @@ class SoftwareSpace:
         if not ev.valid:
             return None, False
         return -float(np.log10(ev.edp)), True
+
+    # --- batched evaluation protocol (repro.timeloop.batch) --------------------
+
+    def sample_pool(self, rng, n: int) -> tlb.MappingBatch | None:
+        """n input-valid candidates drawn in vectorized rounds (None if the
+        space looks empirically empty)."""
+        return tlb.sample_valid_pool(rng, self.hw, self.layer, n)
+
+    def features_batch(self, pool: tlb.MappingBatch) -> np.ndarray:
+        return tlb.features_batch(pool, self.hw, self.layer)
+
+    def evaluate_batch(self, pool: tlb.MappingBatch) -> tuple[np.ndarray, np.ndarray]:
+        """Returns (utility (B,), feasible (B,)); utility is -log10(EDP) with
+        -inf on infeasible rows."""
+        ev = tlb.evaluate_batch(self.hw, pool, self.layer)
+        feasible = ev["valid"]
+        with np.errstate(divide="ignore", invalid="ignore"):
+            utility = np.where(feasible, -np.log10(ev["edp"]), -np.inf)
+        return utility, feasible

@@ -10,8 +10,11 @@ energy-delay product (EDP).
 
 from repro.timeloop.workloads import ConvLayer, PAPER_WORKLOADS, MODEL_LAYERS
 from repro.timeloop.arch import HardwareConfig, EnergyTable, hw_is_valid
-from repro.timeloop.mapping import Mapping, mapping_is_valid, random_mapping
+from repro.timeloop.mapping import (Mapping, mapping_is_valid, random_mapping,
+                                    sample_constrained_batch)
 from repro.timeloop.model import evaluate, Evaluation
+from repro.timeloop.batch import (MappingBatch, evaluate_batch, features_batch,
+                                  pack, sample_valid_pool, valid_batch)
 from repro.timeloop.eyeriss import (
     eyeriss_168,
     eyeriss_256,
@@ -29,8 +32,15 @@ __all__ = [
     "Mapping",
     "mapping_is_valid",
     "random_mapping",
+    "sample_constrained_batch",
     "evaluate",
     "Evaluation",
+    "MappingBatch",
+    "evaluate_batch",
+    "features_batch",
+    "pack",
+    "sample_valid_pool",
+    "valid_batch",
     "eyeriss_168",
     "eyeriss_256",
     "eyeriss_baseline_edp",

@@ -16,6 +16,8 @@ from __future__ import annotations
 
 import dataclasses
 
+import numpy as np
+
 from repro.timeloop.arch import HardwareConfig
 from repro.timeloop.workloads import DIMS, ConvLayer, divisors
 
@@ -158,6 +160,104 @@ def random_mapping(rng, hw: HardwareConfig, layer: ConvLayer) -> Mapping:
         order_gb=tuple(rng.permutation(DIMS)),
         order_dram=tuple(rng.permutation(DIMS)),
     )
+
+
+def sample_constrained_batch(
+    rng, hw: HardwareConfig, layer: ConvLayer, n: int
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Vectorized twin of `constrained_random_mapping`: draw a whole candidate
+    pool in one shot.
+
+    Returns packed arrays `(factors, order_lb, order_gb, order_dram)` with
+    `factors` of shape (n, 5, 6) — levels in LEVELS order, dims in DIMS order —
+    and each order an (n, 6) dim-index permutation, outermost first (the
+    encoding consumed by `repro.timeloop.batch.MappingBatch`).
+
+    Semantics match the scalar sampler: dataflow pins are honored, LB-capacity
+    and PE-mesh constraints are enforced *during* the draw (per-dim uniform
+    choice over the feasible divisors of the remaining extent), and the GB/DRAM
+    split is a uniform divisor pick — so only GB capacity can still reject.
+    The one divergence is that the dim processing order is one random
+    permutation shared across the batch rather than per-row (per-row orders
+    would serialize the draw again); pool statistics are indistinguishable.
+    """
+    B = int(n)
+    n_dims = len(DIMS)
+    # LEVELS order: lb, sx, sy, gb, dram
+    i_lb, i_sx, i_sy, i_gb, i_dram = range(len(LEVELS))
+    factors = np.ones((B, len(LEVELS), n_dims), dtype=np.int64)
+    rem = np.tile(
+        np.array([layer.dim(d) for d in DIMS], dtype=np.int64), (B, 1)
+    )
+    divs = [np.array(divisors(layer.dim(d)), dtype=np.int64) for d in DIMS]
+
+    pinned = [False] * n_dims
+    if hw.df_fw == 2:
+        si = DIMS.index("S")
+        factors[:, i_lb, si] = layer.S
+        rem[:, si] //= layer.S
+        pinned[si] = True
+    if hw.df_fh == 2:
+        ri = DIMS.index("R")
+        factors[:, i_lb, ri] = layer.R
+        rem[:, ri] //= layer.R
+        pinned[ri] = True
+
+    def choose(D: np.ndarray, mask: np.ndarray) -> np.ndarray:
+        """Per-row uniform choice among masked candidates; 1 where none."""
+        counts = mask.sum(axis=1)
+        idx = np.minimum(
+            (rng.random(B) * counts).astype(np.int64),
+            np.maximum(counts - 1, 0),
+        )
+        cum = np.cumsum(mask, axis=1)
+        sel = (cum > idx[:, None]).argmax(axis=1)
+        return np.where(counts > 0, D[sel], 1)
+
+    # --- LB factors: capacity-feasible divisor choice per dim.
+    for di in rng.permutation(n_dims):
+        if pinned[di]:
+            continue
+        D = divs[di]
+        cand = (rem[:, di : di + 1] % D[None, :]) == 0
+        cols = [factors[:, i_lb, j : j + 1] for j in range(n_dims)]
+        cols[di] = np.broadcast_to(D[None, :], (B, len(D)))
+        r, s, p, q, c, k = cols
+        # layer.input_extent is pure arithmetic -> broadcasts over the
+        # (rows, candidates) grid; same formula as the scalar validity check.
+        ok = (
+            (r * s * c * k <= hw.lb_weight)
+            & (layer.input_extent(p, r) * layer.input_extent(q, s) * c
+               <= hw.lb_input)
+            & (p * q * k <= hw.lb_output)
+        )
+        f = choose(D, cand & ok)
+        factors[:, i_lb, di] = f
+        rem[:, di] //= f
+
+    # --- Spatial factors: running-product bound by the PE mesh.
+    for lvl, cap in ((i_sx, hw.pe_mesh_x), (i_sy, hw.pe_mesh_y)):
+        for di in rng.permutation(n_dims):
+            D = divs[di]
+            budget = cap // factors[:, lvl, :].prod(axis=1)
+            mask = ((rem[:, di : di + 1] % D[None, :]) == 0) & (
+                D[None, :] <= budget[:, None]
+            )
+            f = choose(D, mask)
+            factors[:, lvl, di] = f
+            rem[:, di] //= f
+
+    # --- GB / DRAM split of the remainder.
+    for di in range(n_dims):
+        D = divs[di]
+        gb = choose(D, (rem[:, di : di + 1] % D[None, :]) == 0)
+        factors[:, i_gb, di] = gb
+        factors[:, i_dram, di] = rem[:, di] // gb
+
+    def rand_orders() -> np.ndarray:
+        return np.argsort(rng.random((B, n_dims)), axis=1).astype(np.int64)
+
+    return factors, rand_orders(), rand_orders(), rand_orders()
 
 
 def _pick(rng, n: int) -> tuple[int, int]:

@@ -16,6 +16,7 @@ the standard Timeloop encoding of a GEMM as a 1x1 convolution).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 
 DIMS = ("R", "S", "P", "Q", "C", "K")
@@ -128,11 +129,14 @@ def factorize(n: int) -> list[int]:
     return out
 
 
-def divisors(n: int) -> list[int]:
+@functools.lru_cache(maxsize=4096)
+def divisors(n: int) -> tuple[int, ...]:
+    """Sorted divisors of n, memoized: the samplers call this O(pool x dims x
+    levels) times per BO trial on a handful of distinct layer-dim values."""
     small, large = [], []
     for i in range(1, int(math.isqrt(n)) + 1):
         if n % i == 0:
             small.append(i)
             if i != n // i:
                 large.append(n // i)
-    return small + large[::-1]
+    return tuple(small + large[::-1])

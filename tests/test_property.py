@@ -1,7 +1,10 @@
 """Property-based tests (hypothesis) over the system's invariants."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.timeloop import HardwareConfig, PAPER_WORKLOADS, evaluate, eyeriss_168
 from repro.timeloop.arch import hw_is_valid, sample_hardware
@@ -15,7 +18,7 @@ from repro.kernels.tiled_matmul import block_is_valid, vmem_bytes
 @settings(max_examples=60, deadline=None)
 def test_divisors_correct(n):
     ds = divisors(n)
-    assert ds == sorted(set(ds))
+    assert list(ds) == sorted(set(ds))
     assert all(n % d == 0 for d in ds)
     assert 1 in ds and n in ds
     # divisor count cross-check via factorization
@@ -71,6 +74,25 @@ def test_sampled_hardware_structural_invariants(seed):
     ok, why = hw_is_valid(hw)
     if ok:
         assert hw.lb_input + hw.lb_weight + hw.lb_output <= hw.lb_budget
+
+
+@given(st.integers(0, 2**32 - 1), st.sampled_from(sorted(PAPER_WORKLOADS)))
+@settings(max_examples=15, deadline=None)
+def test_batched_engine_matches_scalar(seed, layer_name):
+    """The packed-array engine agrees with the scalar reference on random
+    (possibly invalid) mappings: validity bit and EDP to 1e-9 relative."""
+    from repro.timeloop import batch as tlb
+
+    layer = PAPER_WORKLOADS[layer_name]
+    hw = eyeriss_168()
+    rng = np.random.default_rng(seed)
+    ms = [random_mapping(rng, hw, layer) for _ in range(8)]
+    ev = tlb.evaluate_batch(hw, tlb.pack(ms), layer)
+    for i, m in enumerate(ms):
+        ref = evaluate(hw, m, layer)
+        assert bool(ev["valid"][i]) == ref.valid
+        if ref.valid:
+            assert abs(ev["edp"][i] - ref.edp) <= 1e-9 * ref.edp
 
 
 @given(st.sampled_from([128, 256, 512, 1024]),
