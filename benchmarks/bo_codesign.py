@@ -31,7 +31,10 @@ from repro.timeloop.mapping import constrained_random_mapping, mapping_is_valid
 
 def run_model(model: str, n_hw: int = 12, n_sw: int = 60, seeds=(0,),
               baseline_budget: int = 4000, hw_search: str = "bo",
-              engine: str = "batched"):
+              engine: str = "batched", backend: str | None = None):
+    from repro.core.swspace import default_backend
+
+    backend = backend or default_backend()  # None -> $REPRO_BACKEND or numpy
     layers = MODEL_LAYERS[model]
     num_pes = 256 if model == "transformer" else 168
     base = eyeriss_baseline_edp(layers, num_pes=num_pes, budget=baseline_budget)
@@ -44,7 +47,8 @@ def run_model(model: str, n_hw: int = 12, n_sw: int = 60, seeds=(0,),
             res = codesign(layers, num_pes=num_pes, n_hw_trials=n_hw,
                            n_sw_trials=n_sw, n_sw_warmup=min(20, n_sw // 3),
                            sw_pool=60, hw_pool=60, seed=seed,
-                           batched=batched, use_cache=batched)
+                           batched=batched, use_cache=batched,
+                           backend=backend)
             bests.append(res.best_model_edp)
             curves.append(res.hw_result.history)
         else:  # constrained random hardware search (paper's HW baseline)
@@ -79,6 +83,7 @@ def run_model(model: str, n_hw: int = 12, n_sw: int = 60, seeds=(0,),
         "wall_time_s": times,
         "best_log10_edp_per_seed": [float(np.log10(b)) for b in bests],
         "engine": engine,
+        "backend": backend,
     }
 
 
@@ -87,12 +92,15 @@ def engine_speedup(layers=("ResNet-K2", "DQN-K1", "Transformer-K2"),
     """Hot-path microbenchmark mirroring exactly one BO acquisition trial:
     draw an input-valid pool, featurize it, evaluate the acquisition argmax
     (here: candidate 0 — the surrogate posterior is engine-independent and
-    excluded).  Scalar reference vs batched engine, per layer plus geomean."""
+    excluded).  Scalar reference vs the NumPy batch engine vs the JAX engine
+    (`batch_jax`, jit-warmed before timing), per layer plus geomeans — both
+    backends' hot-path timings land in BENCH_codesign.json."""
     from repro.timeloop import PAPER_WORKLOADS
+    from repro.timeloop import batch_jax as jtlb
 
     hw = eyeriss_168()
     out: dict = {"pool": pool, "reps": reps, "layers": {}}
-    speedups = []
+    speedups, speedups_jax = [], []
     for name in layers:
         layer = PAPER_WORKLOADS[name]
         space = SoftwareSpace(hw, layer)
@@ -117,41 +125,70 @@ def engine_speedup(layers=("ResNet-K2", "DQN-K1", "Transformer-K2"),
             evaluate(hw, mb[0], layer)
         t_batched = time.perf_counter() - t0
 
+        # JAX engine: the fused device program covers features + EDP in one
+        # dispatch; warm the jit cache outside the timed region.
+        rng = np.random.default_rng(seed)
+        warm = tlb.sample_valid_pool(rng, hw, layer, pool)
+        jtlb.forward_device(hw, warm, layer)["features"].block_until_ready()
+        rng = np.random.default_rng(seed)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            mb = tlb.sample_valid_pool(rng, hw, layer, pool)
+            jtlb.forward_device(hw, mb, layer)["features"].block_until_ready()
+            evaluate(hw, mb[0], layer)  # same per-trial winner eval as above
+        t_jax = time.perf_counter() - t0
+
         sp = t_scalar / t_batched
+        sp_jax = t_scalar / t_jax
         speedups.append(sp)
+        speedups_jax.append(sp_jax)
         out["layers"][name] = {
             "scalar_s": round(t_scalar, 4),
             "batched_s": round(t_batched, 4),
+            "jax_s": round(t_jax, 4),
             "speedup": round(sp, 2),
+            "jax_speedup": round(sp_jax, 2),
         }
     out["geomean_speedup"] = round(float(np.exp(np.mean(np.log(speedups)))), 2)
+    out["geomean_jax_speedup"] = round(
+        float(np.exp(np.mean(np.log(speedups_jax)))), 2)
     return out
 
 
 def e2e_speedup(model: str = "dqn", n_hw: int = 4, n_sw: int = 40,
                 seed: int = 0) -> dict:
-    """End-to-end nested co-design at reduced budgets: batched engine +
-    (hw, layer) cache vs the pre-engine scalar path.  (GP surrogate fits are
-    identical on both sides, so this is bounded well below the raw engine
-    speedup; the hot-path numbers are in `engine_speedup`.)"""
+    """End-to-end nested co-design at reduced budgets: NumPy / JAX batch
+    engines + (hw, layer) cache vs the pre-engine scalar path.  (GP surrogate
+    fits are identical on all sides, so this is bounded well below the raw
+    engine speedup; the hot-path numbers are in `engine_speedup`.)"""
     layers = MODEL_LAYERS[model]
     out = {}
-    for engine in ("scalar", "batched"):
-        batched = engine == "batched"
+    for engine in ("scalar", "batched", "jax"):
+        batched = engine != "scalar"
+        backend = "jax" if engine == "jax" else "numpy"
+        if engine == "jax":
+            # Untimed warmup at the same pool/bucket sizes so one-time jit
+            # compiles don't land inside the timed window (mirrors the
+            # block_until_ready warmup in engine_speedup).
+            codesign(layers, n_hw_trials=1, n_sw_trials=n_sw,
+                     n_sw_warmup=min(20, n_sw // 3), sw_pool=60, hw_pool=60,
+                     seed=seed, batched=True, use_cache=True, backend="jax")
         t0 = time.perf_counter()
         codesign(layers, n_hw_trials=n_hw, n_sw_trials=n_sw,
                  n_sw_warmup=min(20, n_sw // 3), sw_pool=60, hw_pool=60,
-                 seed=seed, batched=batched, use_cache=batched)
+                 seed=seed, batched=batched, use_cache=batched,
+                 backend=backend)
         out[f"{engine}_s"] = round(time.perf_counter() - t0, 3)
     out["speedup"] = round(out["scalar_s"] / out["batched_s"], 2)
+    out["jax_speedup"] = round(out["scalar_s"] / out["jax_s"], 2)
     return out
 
 
 def run(n_hw: int = 12, n_sw: int = 60, seeds=(0,), quiet: bool = False,
-        collect: dict | None = None):
+        collect: dict | None = None, backend: str | None = None):
     out = {}
     for model in ("resnet", "dqn", "mlp", "transformer"):
-        r = run_model(model, n_hw=n_hw, n_sw=n_sw, seeds=seeds)
+        r = run_model(model, n_hw=n_hw, n_sw=n_sw, seeds=seeds, backend=backend)
         out[model] = r
         if not quiet:
             print(f"fig5a,{model},eyeriss={r['eyeriss_edp']:.3e},"
@@ -168,6 +205,7 @@ def run(n_hw: int = 12, n_sw: int = 60, seeds=(0,), quiet: bool = False,
                     _finite(b) for b in r["best_log10_edp_per_seed"]
                 ],
                 "seeds": list(seeds),
+                "backend": r["backend"],
             }
     return out
 
@@ -182,10 +220,13 @@ def print_speedups(eng: dict, e2e: dict) -> None:
     """CSV lines for the engine/e2e speedup records (shared with run.py)."""
     for name, r in eng["layers"].items():
         print(f"engine,{name},scalar={r['scalar_s']}s,"
-              f"batched={r['batched_s']}s,speedup={r['speedup']}x")
-    print(f"engine,geomean,speedup={eng['geomean_speedup']}x")
+              f"batched={r['batched_s']}s,jax={r['jax_s']}s,"
+              f"speedup={r['speedup']}x,jax_speedup={r['jax_speedup']}x")
+    print(f"engine,geomean,speedup={eng['geomean_speedup']}x,"
+          f"jax_speedup={eng['geomean_jax_speedup']}x")
     print(f"e2e,codesign,scalar={e2e['scalar_s']}s,"
-          f"batched={e2e['batched_s']}s,speedup={e2e['speedup']}x")
+          f"batched={e2e['batched_s']}s,jax={e2e['jax_s']}s,"
+          f"speedup={e2e['speedup']}x,jax_speedup={e2e['jax_speedup']}x")
 
 
 if __name__ == "__main__":
@@ -196,10 +237,13 @@ if __name__ == "__main__":
     ap.add_argument("--hw-search", default="bo", choices=("bo", "random"))
     ap.add_argument("--speedup", action="store_true",
                     help="only run the batched-engine speedup benchmarks")
+    ap.add_argument("--backend", default=None, choices=("numpy", "jax"),
+                    help="inner evaluation engine for the co-design runs "
+                         "(default: $REPRO_BACKEND or numpy)")
     args = ap.parse_args()
     if args.speedup:
         print_speedups(engine_speedup(), e2e_speedup())
     elif args.paper:
-        run(n_hw=50, n_sw=250, seeds=(0, 1, 2))
+        run(n_hw=50, n_sw=250, seeds=(0, 1, 2), backend=args.backend)
     else:
-        run()
+        run(backend=args.backend)

@@ -1,0 +1,113 @@
+"""Cross-PR benchmark comparison gate (ROADMAP "perf trajectory tracking").
+
+Compares the hot-path engine numbers in two `BENCH_codesign.json` records --
+the previous commit's CI artifact vs the one just produced -- and fails (exit
+1, with a GitHub `::error::` annotation) when the hot path regresses by more
+than the threshold.  Improvements and per-layer details are emitted as
+`::notice::` annotations.
+
+    python -m benchmarks.compare_bench prev/BENCH_codesign.json \
+        BENCH_codesign.json --threshold 0.20
+
+The gate compares *speedup ratios* (scalar_s / engine_s, per layer under
+`engine_speedup.layers`), not absolute seconds: both sides of a ratio are
+measured in the same run on the same machine, so runner-to-runner wall-clock
+variance (shared CI hardware spans CPU generations) cancels out, while a real
+engine regression still shows up as a dropped ratio.
+
+    speedup       NumPy batch engine vs scalar   (gating: geomean drop
+                                                  >threshold -> fail)
+    jax_speedup   JAX batch engine vs scalar     (annotating only: jit/dispatch
+                                                  timings are noisier)
+
+A missing/invalid previous record is not an error -- first runs and artifact
+expiry just skip the gate with a notice.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+from pathlib import Path
+
+
+def _load(path: str) -> dict | None:
+    p = Path(path)
+    if not p.is_file():
+        return None
+    try:
+        return json.loads(p.read_text())
+    except (OSError, json.JSONDecodeError):
+        return None
+
+
+def _speedups(record: dict, key: str) -> dict[str, float]:
+    layers = (record.get("engine_speedup") or {}).get("layers") or {}
+    return {
+        name: float(r[key])
+        for name, r in layers.items()
+        if isinstance(r, dict) and isinstance(r.get(key), (int, float))
+        and r[key] > 0
+    }
+
+
+def _geomean_ratio(old: dict[str, float], new: dict[str, float]) -> tuple[float | None, list[str]]:
+    """Geomean of new/old per-layer speedup ratios over the shared layers
+    (> 1 means the hot path got relatively faster, < 1 slower)."""
+    shared = sorted(set(old) & set(new))
+    if not shared:
+        return None, []
+    log_sum = 0.0
+    details = []
+    for name in shared:
+        ratio = new[name] / old[name]
+        log_sum += math.log(ratio)
+        details.append(f"{name}: {old[name]:.2f}x -> {new[name]:.2f}x "
+                       f"({(ratio - 1) * 100:+.1f}%)")
+    return math.exp(log_sum / len(shared)), details
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("old", help="previous commit's BENCH_codesign.json")
+    ap.add_argument("new", help="this run's BENCH_codesign.json")
+    ap.add_argument("--threshold", type=float, default=0.20,
+                    help="max allowed geomean hot-path speedup drop "
+                         "(0.20 = -20%%)")
+    args = ap.parse_args()
+
+    old = _load(args.old)
+    new = _load(args.new)
+    if old is None:
+        print(f"::notice::compare_bench: no previous record at {args.old}; "
+              "skipping the regression gate (first run or expired artifact).")
+        return 0
+    if new is None:
+        print(f"::error::compare_bench: current record {args.new} is missing "
+              "or unreadable.")
+        return 1
+
+    failed = False
+    for key, gating in (("speedup", True), ("jax_speedup", False)):
+        ratio, details = _geomean_ratio(_speedups(old, key), _speedups(new, key))
+        if ratio is None:
+            print(f"::notice::compare_bench[{key}]: no shared layers to "
+                  "compare (metric added/renamed?); skipping.")
+            continue
+        pct = (ratio - 1) * 100
+        summary = (f"compare_bench[{key}]: geomean hot-path speedup "
+                   f"{pct:+.1f}% vs previous ({'; '.join(details)})")
+        if ratio < 1.0 - args.threshold:
+            level = "error" if gating else "warning"
+            print(f"::{level}::{summary} -- exceeds the "
+                  f"{args.threshold:.0%} regression threshold.")
+            failed = failed or gating
+        else:
+            print(f"::notice::{summary}")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -23,7 +23,15 @@ def main() -> None:
     ap.add_argument("--json", action="store_true",
                     help="write BENCH_codesign.json (wall time, best log10 EDP "
                          "per seed, engine speedups)")
+    ap.add_argument("--backend", default=None, choices=("numpy", "jax"),
+                    help="batched evaluation engine for the co-design section "
+                         "(default: $REPRO_BACKEND or numpy; the speedup "
+                         "section always times both)")
     args, _ = ap.parse_known_args()
+
+    from repro.core.swspace import default_backend
+
+    backend = args.backend or default_backend()
 
     from benchmarks import bo_ablation, bo_codesign, bo_software, roofline
 
@@ -39,13 +47,15 @@ def main() -> None:
             samples=30_000 if args.paper else 8_000):
         print(f"feasibility,{name},{ok}/{n},{rate:.4%}")
 
-    print("# Fig. 4 / 5a -- HW/SW co-design vs Eyeriss")
+    print(f"# Fig. 4 / 5a -- HW/SW co-design vs Eyeriss (backend={backend})")
     if args.paper:
-        bo_codesign.run(n_hw=50, n_sw=250, seeds=(0, 1, 2), collect=collect)
+        bo_codesign.run(n_hw=50, n_sw=250, seeds=(0, 1, 2), collect=collect,
+                        backend=backend)
     else:
-        bo_codesign.run(n_hw=12, n_sw=60, seeds=(0,), collect=collect)
+        bo_codesign.run(n_hw=12, n_sw=60, seeds=(0,), collect=collect,
+                        backend=backend)
 
-    print("# batched engine -- hot-path + end-to-end speedup vs scalar path")
+    print("# engines -- hot-path + end-to-end speedups (numpy + jax) vs scalar")
     eng = bo_codesign.engine_speedup()
     e2e = bo_codesign.e2e_speedup()
     bo_codesign.print_speedups(eng, e2e)
@@ -63,6 +73,7 @@ def main() -> None:
     if collect is not None:
         collect["engine_speedup"] = eng
         collect["e2e_speedup"] = e2e
+        collect["backend"] = backend
         collect["paper_budgets"] = bool(args.paper)
         collect["total_s"] = round(total, 1)
         with open("BENCH_codesign.json", "w") as f:

@@ -16,6 +16,15 @@ Spaces may implement the *batched evaluation protocol* — `supports_batch`
 acquisition pool are sampled, featurized, and scored as whole arrays instead of
 one candidate at a time; spaces without it (e.g. the hardware space, whose
 evaluator is a nested search) transparently fall back to the scalar path.
+
+Spaces that additionally expose `supports_device` + `features_batch_device`
+(the JAX engine, `repro.timeloop.batch_jax`) get *device-resident* pool
+scoring: featurization, GP posterior, acquisition, and the feasibility
+classifier all stay on-device as one fused chain per trial, and only the
+argmax index (plus the winner's feature row) crosses back to the host.
+Everything on the host side of that boundary is kept strictly NumPy —
+`np.asarray` at every device edge — so no host computation silently promotes
+to device arrays with a blocking transfer per trial.
 """
 
 from __future__ import annotations
@@ -25,7 +34,7 @@ from typing import Any, Callable
 
 import numpy as np
 
-from repro.core.acquisition import make_acquisition
+from repro.core.acquisition import make_acquisition, make_acquisition_device
 from repro.core.gp import GP, GPClassifier
 from repro.core.trees import RandomForestSurrogate
 
@@ -58,9 +67,34 @@ def bo_maximize(
     seed: int = 0,
     gp_refit_every: int = 1,
     callback: Callable[[int, BOResult], None] | None = None,
+    backend: str | None = None,
 ) -> BOResult:
+    if backend is not None:
+        # Engine override for spaces that carry one, scoped to this run --
+        # the caller's space is restored on the way out.  Unknown values and
+        # spaces without backend selection are reported, never ignored.
+        from repro.core.swspace import BACKENDS
+
+        if backend not in BACKENDS:
+            raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
+        if not hasattr(space, "backend"):
+            raise ValueError(
+                f"space {getattr(space, 'name', space)!r} does not support "
+                "backend selection")
+        prev_backend = space.backend
+        space.backend = backend
+        try:
+            return bo_maximize(
+                space, n_trials=n_trials, n_warmup=n_warmup,
+                pool_size=pool_size, acquisition=acquisition, lam=lam,
+                surrogate=surrogate, noisy=noisy, seed=seed,
+                gp_refit_every=gp_refit_every, callback=callback,
+            )
+        finally:
+            space.backend = prev_backend
     rng = np.random.default_rng(seed)
     acq = make_acquisition(acquisition, lam)
+    acq_dev = None
 
     X_feas: list[np.ndarray] = []
     y_feas: list[float] = []
@@ -69,6 +103,13 @@ def bo_maximize(
     result = BOResult(None, -np.inf, [], [], [])
 
     use_batch = bool(getattr(space, "supports_batch", False))
+    # Device-resident scoring needs the GP surrogate (the tree surrogate is
+    # host-only) and a space whose feature arrays already live on device.
+    use_device = (
+        use_batch
+        and bool(getattr(space, "supports_device", False))
+        and surrogate in ("gp_linear", "gp_se")
+    )
 
     def observe(point, feats=None, outcome=None):
         feats = space.features(point) if feats is None else feats
@@ -141,6 +182,26 @@ def bo_maximize(
                 callback(t, result)
             continue
 
+        if use_device:
+            # Fused pool scoring: features, GP posterior, acquisition, and
+            # P(feasible) chain on-device; one scalar index comes back.
+            import jax.numpy as jnp
+
+            if acq_dev is None:
+                acq_dev = make_acquisition_device(acquisition, lam)
+            pool = sample_valid_pool(pool_size)
+            feats_dev = space.features_batch_device(pool)
+            mu, var = model.posterior_device(feats_dev)
+            utility = acq_dev(mu, var, result.best_value)
+            if classifier is not None:
+                utility = utility * classifier.prob_feasible_device(feats_dev)
+            i_best = int(jnp.argmax(utility))
+            observe(pool[i_best],
+                    feats=np.asarray(feats_dev[i_best], dtype=np.float64))
+            if callback:
+                callback(t, result)
+            continue
+
         if use_batch:
             pool = sample_valid_pool(pool_size)
             feats = space.features_batch(pool)
@@ -150,7 +211,10 @@ def bo_maximize(
         mu, var = model.posterior(feats)
         utility = acq(mu, var, result.best_value)
         if classifier is not None:
-            utility = utility * classifier.prob_feasible(feats)
+            # prob_feasible returns a host array; the asarray keeps the
+            # boundary explicit so the acquisition math never silently
+            # promotes to device arrays.
+            utility = utility * np.asarray(classifier.prob_feasible(feats))
         i_best = int(np.argmax(utility))
         observe(pool[i_best], feats=feats[i_best])
         if callback:

@@ -6,6 +6,13 @@ on the negative marginal log-likelihood.  Dataset sizes here are tiny (<= a few
 hundred), so exact Cholesky GPs are cheap; to keep the jitted fit fast on CPU we
 pad X/y to bucketed sizes (powers of two) with masked-out rows so the compiled
 function is reused across BO iterations.
+
+The Cholesky solves need float64, but that is scoped to the GP computations via
+the `jax.experimental.enable_x64` context -- importing this module does NOT flip
+the process-global x64 flag (which would silently force every other JAX program
+in the process, e.g. the float32 Pallas evaluation engine, to f64).  The fitted
+state is held as f64 device arrays, which flow through jit fine regardless of
+the global flag.
 """
 
 from __future__ import annotations
@@ -16,8 +23,8 @@ import functools
 import jax
 import jax.numpy as jnp
 import numpy as np
-
-jax.config.update("jax_enable_x64", True)
+from jax.experimental import enable_x64
+from scipy.special import erf as _erf
 
 _JITTER = 1e-6
 _PAD_NOISE = 1e6  # effective infinite noise on padded rows -> zero influence
@@ -73,13 +80,19 @@ def _nll(params, X, y, mask, kind):
     return 0.5 * (quad + logdet + n_eff * jnp.log(2.0 * jnp.pi))
 
 
-@functools.partial(jax.jit, static_argnames=("kind", "steps", "lr"))
-def _fit(params, X, y, mask, kind, steps=80, lr=0.05):
+@functools.partial(jax.jit, static_argnames=("kind", "steps", "lr", "train_tau"))
+def _fit(params, X, y, mask, kind, steps=80, lr=0.05, train_tau=True):
     grad_fn = jax.grad(_nll)
 
     def adam_step(carry, _):
         p, m, v, t = carry
         g = grad_fn(p, X, y, mask, kind)
+        if not train_tau:
+            # Deterministic evaluator: the noise level is pinned, so exclude it
+            # from the update entirely -- otherwise the other hyperparameters
+            # are optimized against a drifting noise level that is only
+            # re-pinned after the fact.
+            g = dict(g, log_tau=jnp.zeros_like(g["log_tau"]))
         t = t + 1
         m = jax.tree.map(lambda a, b: 0.9 * a + 0.1 * b, m, g)
         v = jax.tree.map(lambda a, b: 0.999 * a + 0.001 * b * b, v, g)
@@ -136,20 +149,33 @@ class GP:
         yp = np.zeros((b,))
         mask = np.zeros((b,))
         Xp[:n], yp[:n], mask[:n] = X, y, 1.0
-        params = _init_params(self.kind, d)
-        params["mean_const"] = jnp.asarray(float(y.mean()))
-        params["log_tau"] = jnp.asarray(np.log(max(y.std(), 1e-3) * 0.1) if self.noisy else -6.0)
-        params = _fit(params, jnp.asarray(Xp), jnp.asarray(yp), jnp.asarray(mask), self.kind, self.steps)
-        if not self.noisy:
-            params["log_tau"] = jnp.asarray(-6.0)
-        self._state = (params, jnp.asarray(Xp), jnp.asarray(yp), jnp.asarray(mask))
+        with enable_x64():
+            params = _init_params(self.kind, d)
+            params["mean_const"] = jnp.asarray(float(y.mean()))
+            params["log_tau"] = jnp.asarray(
+                np.log(max(y.std(), 1e-3) * 0.1) if self.noisy else -6.0)
+            # With noisy=False the pinned log_tau is frozen *during* the fit
+            # (zeroed gradient), so the remaining hyperparameters are trained
+            # against the true fixed noise level -- no post-fit re-pin needed.
+            params = _fit(params, jnp.asarray(Xp), jnp.asarray(yp),
+                          jnp.asarray(mask), self.kind, self.steps,
+                          train_tau=self.noisy)
+            self._state = (params, jnp.asarray(Xp), jnp.asarray(yp),
+                           jnp.asarray(mask))
         return self
 
     def posterior(self, Xs: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        mu, var = self.posterior_device(Xs)
+        return np.asarray(mu), np.asarray(var)
+
+    def posterior_device(self, Xs) -> tuple[jax.Array, jax.Array]:
+        """Posterior as device arrays -- lets the batched-engine acquisition
+        scoring stay device-resident (no host round-trip per BO trial)."""
         assert self._state is not None, "fit() first"
         params, Xp, yp, mask = self._state
-        mu, var = _posterior(params, Xp, yp, mask, jnp.asarray(Xs, jnp.float64), self.kind)
-        return np.asarray(mu), np.asarray(var)
+        with enable_x64():
+            Xs = jnp.asarray(Xs, jnp.float64)
+            return _posterior(params, Xp, yp, mask, Xs, self.kind)
 
     @property
     def params(self):
@@ -171,8 +197,26 @@ class GPClassifier:
         return self
 
     def prob_feasible(self, Xs: np.ndarray) -> np.ndarray:
+        """Host-side P(feasible): returns a plain NumPy array.  (The erf runs
+        on the host -- a JAX array here would silently promote the whole
+        acquisition computation in `bo_maximize` to device arrays with a
+        blocking transfer per trial.)"""
         if self._gp is None:
             return np.ones(len(Xs))
         mu, var = self._gp.posterior(Xs)
         z = mu / np.sqrt(1.0 + var)
-        return 0.5 * (1.0 + jax.scipy.special.erf(z / np.sqrt(2.0)))
+        return 0.5 * (1.0 + _erf(z / np.sqrt(2.0)))
+
+    def prob_feasible_device(self, Xs) -> jax.Array:
+        """Device-resident twin of `prob_feasible` for the fused scoring path.
+        (The erf must trace under scoped x64, or its internal constants
+        canonicalize to f32 and poison the f64 posterior's precision.  Even
+        then jax's and scipy's erf differ by ~1e-8 -- implementation, not
+        dtype -- so host/device probabilities agree to ~1e-8, far below
+        anything the acquisition argmax can resolve.)"""
+        if self._gp is None:
+            return jnp.ones(len(Xs))
+        mu, var = self._gp.posterior_device(Xs)
+        with enable_x64():
+            z = mu / jnp.sqrt(1.0 + var)
+            return 0.5 * (1.0 + jax.scipy.special.erf(z / np.sqrt(2.0)))

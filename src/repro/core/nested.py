@@ -44,8 +44,9 @@ def optimize_software(
     surrogate: str = "gp_linear",
     seed: int = 0,
     batched: bool = True,
+    backend: str | None = None,  # evaluation engine: "numpy" | "jax"
 ) -> BOResult:
-    space = SoftwareSpace(hw, layer, batched=batched)
+    space = SoftwareSpace(hw, layer, batched=batched, backend=backend)
     try:
         return bo_maximize(
             space,
@@ -80,6 +81,7 @@ def codesign(
     verbose: bool = False,
     batched: bool = True,
     use_cache: bool = True,
+    backend: str | None = None,  # inner-engine selector: "numpy" | "jax"
 ) -> CoDesignResult:
     inner_seed = [seed * 7919]
     best = {"edp": np.inf, "hw": None, "maps": None, "per_layer": None}
@@ -98,7 +100,7 @@ def codesign(
                 hw, layer,
                 n_trials=n_sw_trials, n_warmup=n_sw_warmup, pool_size=sw_pool,
                 acquisition=acquisition, lam=lam, surrogate=surrogate,
-                seed=inner_seed[0], batched=batched,
+                seed=inner_seed[0], batched=batched, backend=backend,
             )
             if r.best_point is None:
                 inner_cache[key] = (None, float("inf"))

@@ -5,15 +5,27 @@ enforces them as input constraints; the evaluator is deterministic, so the GP
 uses no noise kernel.  Features follow Fig. 13 plus order-sensitive log trip
 counts, which give the linear kernel direct visibility into the reuse structure.
 
-The space implements the BO loop's batched evaluation protocol on top of
-`repro.timeloop.batch`: whole candidate pools are sampled, featurized, and
-scored as packed arrays (set `batched=False` to force the scalar reference
-path, e.g. for speedup benchmarking).
+The space implements the BO loop's batched evaluation protocol on top of a
+selectable engine:
+
+  backend="numpy"  `repro.timeloop.batch` -- vectorized NumPy (default)
+  backend="jax"    `repro.timeloop.batch_jax` -- jitted `jax.vmap` engine with
+                   a Pallas inner kernel; additionally exposes
+                   `features_batch_device` so the BO loop can keep the GP
+                   posterior + acquisition scoring device-resident
+
+`backend=None` reads the `REPRO_BACKEND` environment variable (so CI can run
+the whole suite against either engine) and falls back to "numpy".  Candidate
+pools are sampled host-side with either backend -- the constrained rejection
+sampler is branchy NumPy; only featurization/evaluation/scoring move to JAX.
+Set `batched=False` to force the scalar reference path, e.g. for speedup
+benchmarking.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import os
 
 import numpy as np
 
@@ -46,6 +58,13 @@ FEATURE_NAMES = (
     "log_macs_per_pe",
 )
 
+BACKENDS = ("numpy", "jax")
+
+
+def default_backend() -> str:
+    """Engine selected by $REPRO_BACKEND, falling back to "numpy"."""
+    return os.environ.get("REPRO_BACKEND", "numpy")
+
 
 @dataclasses.dataclass
 class SoftwareSpace:
@@ -53,6 +72,28 @@ class SoftwareSpace:
     layer: ConvLayer
     name: str = "software"
     batched: bool = True  # expose the batched protocol to the BO loop
+    backend: str | None = None  # "numpy" | "jax" | None -> $REPRO_BACKEND
+
+    def __post_init__(self) -> None:
+        if self.backend is None:
+            self.backend = default_backend()
+        if self.backend not in BACKENDS:
+            raise ValueError(
+                f"backend must be one of {BACKENDS}, got {self.backend!r}")
+        # One fused device program computes validity+EDP+features together, so
+        # features_batch / evaluate_batch / features_batch_device on the same
+        # pool object must share a single dispatch (the BO warmup calls two of
+        # them back to back).
+        self._fwd_cache: tuple[object, dict] | None = None
+
+    def _forward_jax(self, pool) -> dict:
+        # Deferred import: the default NumPy backend must not pay for (or
+        # depend on) the jax.experimental.pallas import chain.
+        from repro.timeloop import batch_jax as jtlb
+
+        if self._fwd_cache is None or self._fwd_cache[0] is not pool:
+            self._fwd_cache = (pool, jtlb.forward_device(self.hw, pool, self.layer))
+        return self._fwd_cache[1]
 
     @property
     def feature_dim(self) -> int:
@@ -61,6 +102,12 @@ class SoftwareSpace:
     @property
     def supports_batch(self) -> bool:
         return self.batched
+
+    @property
+    def supports_device(self) -> bool:
+        """Whether `features_batch_device` returns device-resident arrays the
+        BO loop can score without a host round-trip."""
+        return self.batched and self.backend == "jax"
 
     def sample(self, rng) -> Mapping:
         return constrained_random_mapping(rng, self.hw, self.layer)
@@ -101,7 +148,7 @@ class SoftwareSpace:
             return None, False
         return -float(np.log10(ev.edp)), True
 
-    # --- batched evaluation protocol (repro.timeloop.batch) --------------------
+    # --- batched evaluation protocol (batch / batch_jax) ------------------------
 
     def sample_pool(self, rng, n: int) -> tlb.MappingBatch | None:
         """n input-valid candidates drawn in vectorized rounds (None if the
@@ -109,13 +156,23 @@ class SoftwareSpace:
         return tlb.sample_valid_pool(rng, self.hw, self.layer, n)
 
     def features_batch(self, pool: tlb.MappingBatch) -> np.ndarray:
+        if self.backend == "jax":
+            return np.asarray(self._forward_jax(pool)["features"])
         return tlb.features_batch(pool, self.hw, self.layer)
 
     def evaluate_batch(self, pool: tlb.MappingBatch) -> tuple[np.ndarray, np.ndarray]:
         """Returns (utility (B,), feasible (B,)); utility is -log10(EDP) with
         -inf on infeasible rows."""
+        if self.backend == "jax":
+            out = self._forward_jax(pool)
+            return np.asarray(out["utility"]), np.asarray(out["valid"])
         ev = tlb.evaluate_batch(self.hw, pool, self.layer)
         feasible = ev["valid"]
         with np.errstate(divide="ignore", invalid="ignore"):
             utility = np.where(feasible, -np.log10(ev["edp"]), -np.inf)
         return utility, feasible
+
+    def features_batch_device(self, pool: tlb.MappingBatch):
+        """(B, 14) features as a device-resident jax.Array (JAX backend only)."""
+        assert self.backend == "jax", "device features require backend='jax'"
+        return self._forward_jax(pool)["features"]

@@ -1,0 +1,158 @@
+"""Pallas kernel for the per-mapping trip-count / energy reduction.
+
+This is the innermost arithmetic of the analytical cost model (`model.evaluate`
+-> `batch.evaluate_batch`): for each candidate mapping, reduce the per-level
+loop factors into refetch trip counts (the Timeloop temporal-reuse rule),
+read-modify-write passes, and finally the energy / delay / EDP scalars.
+
+The numerics live in `reduce_edp_terms`, a batched pure-`jnp` function used two
+ways:
+
+  * called directly on full `(B, ...)` arrays -- the `jnp` fallback path that
+    CPU CI runs (and the reference the kernel is parity-tested against);
+  * called blockwise inside `_edp_kernel`, the Pallas kernel body, via
+    `edp_reduce(..., interpret=...)` -- compiled on TPU, interpreter-mode
+    elsewhere.
+
+Both paths are driven by `repro.timeloop.batch_jax`; see that module for the
+packed operand layout.
+
+Operand layout (all leading dim B):
+
+  fo     (B, 2, 6)     loop factors *in loop order* at [gb, dram] level
+  relo   (B, 2, 3, 6)  0/1 relevance per [level, tensor(W,I,O), loop position]
+  tiles  (B, 2, 3)     [lb, gb] x [W, I, O] tile sizes
+  sp     (B, 5)        [sp_rel_W, sp_rel_I, sp_rel_O, sp_all, used_pes]
+  consts (8,)          [e_mac, e_lb, e_noc, e_gb, e_dram, gb_bw, dram_bw, macs]
+
+Outputs:
+
+  ev     (B, 3)        [energy_pj, delay_cycles, edp]
+  trips  (B, 6)        refetch trips [W, I, O]@gb then [W, I, O]@dram
+                       (feature inputs: `features_batch` takes log1p of these)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+N_DIMS = 6
+N_TENSORS = 3
+
+
+def reduce_edp_terms(fo, relo, tiles, sp, consts):
+    """Batched trip-count + energy reduction (see module docstring for shapes).
+
+    Mirrors `repro.timeloop.model.evaluate` / `batch.evaluate_batch` exactly;
+    pure `jnp`, so it runs unchanged as the fallback path and as the Pallas
+    kernel body (where the leading dim is the block size).
+    """
+    n = fo.shape[0]
+    dtype = fo.dtype
+    one = jnp.ones((), dtype)
+    pos = jax.lax.broadcasted_iota(jnp.int32, (n, N_DIMS), 1)
+
+    def level_trips(f, r):
+        # f: (n, 6) factors in loop order; r: (n, 6) 0/1 relevance mask.
+        rel = r > 0.5
+        active = rel & (f > 1.0)
+        innermost = jnp.max(jnp.where(active, pos, -1), axis=1)
+        include = rel | (pos < innermost[:, None])
+        t = jnp.prod(jnp.where(include, f, one), axis=1)
+        return jnp.where(jnp.any(active, axis=1), t, one)
+
+    def passes(f, r):
+        # Reduction passes for outputs: irrelevant loops outside all relevant.
+        rel = r > 0.5
+        active = rel & (f > 1.0)
+        anchor = jnp.min(jnp.where(active, pos, N_DIMS), axis=1)
+        include = (~rel) & (pos < anchor[:, None])
+        return jnp.prod(jnp.where(include, f, one), axis=1)
+
+    e_mac, e_lb, e_noc, e_gb, e_dram, gb_bw, dram_bw, macs = (
+        consts[i] for i in range(8)
+    )
+
+    trips = [
+        level_trips(fo[:, li, :], relo[:, li, ti, :])
+        for li in range(2)
+        for ti in range(N_TENSORS)
+    ]
+    rw_gb = 2.0 * passes(fo[:, 0, :], relo[:, 0, 2, :]) - 1.0
+    rw_dram = 2.0 * passes(fo[:, 1, :], relo[:, 1, 2, :]) - 1.0
+
+    sp_all = sp[:, 3]
+    used = sp[:, 4]
+    lb_acc = jnp.zeros((n,), dtype)
+    noc_acc = jnp.zeros((n,), dtype)
+    gb_acc = jnp.zeros((n,), dtype)
+    dram_acc = jnp.zeros((n,), dtype)
+    for ti in range(N_TENSORS):
+        gb_trips = trips[ti]
+        dram_trips = trips[N_TENSORS + ti]
+        rw = rw_gb if ti == 2 else one
+        rw_d = rw_dram if ti == 2 else one
+        fills_lb = tiles[:, 0, ti] * gb_trips * dram_trips
+        gb_acc += fills_lb * sp[:, ti] * rw
+        noc_acc += fills_lb * sp_all * rw
+        lb_acc += fills_lb * sp_all * rw
+        dram_acc += tiles[:, 1, ti] * dram_trips * rw_d
+    lb_acc += 4.0 * macs
+
+    energy = (
+        macs * e_mac
+        + lb_acc * e_lb
+        + noc_acc * e_noc
+        + gb_acc * e_gb
+        + dram_acc * e_dram
+    )
+    delay = jnp.maximum(
+        macs / used, jnp.maximum(gb_acc / gb_bw, dram_acc / dram_bw)
+    )
+    ev = jnp.stack([energy, delay, energy * delay], axis=1)
+    return ev, jnp.stack(trips, axis=1)
+
+
+def _edp_kernel(fo_ref, relo_ref, tiles_ref, sp_ref, consts_ref, ev_ref, trips_ref):
+    ev, trips = reduce_edp_terms(
+        fo_ref[...], relo_ref[...], tiles_ref[...], sp_ref[...], consts_ref[...]
+    )
+    ev_ref[...] = ev
+    trips_ref[...] = trips
+
+
+def edp_reduce(fo, relo, tiles, sp, consts, *, block: int = 128,
+               interpret: bool = True):
+    """Pallas dispatch of `reduce_edp_terms`, blocked over the pool dim.
+
+    The pool dim must be divisible by the block size (the caller pads to a
+    power-of-two bucket, so `min(block, B)` always divides).  `interpret=True`
+    runs the kernel body block-by-block in Python -- the CPU CI path;
+    `interpret=False` compiles for the accelerator.
+    """
+    n = fo.shape[0]
+    blk = min(block, n)
+    assert n % blk == 0, (n, blk)
+    grid = (n // blk,)
+    return pl.pallas_call(
+        _edp_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((blk, 2, N_DIMS), lambda i: (i, 0, 0)),
+            pl.BlockSpec((blk, 2, N_TENSORS, N_DIMS), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((blk, 2, N_TENSORS), lambda i: (i, 0, 0)),
+            pl.BlockSpec((blk, 5), lambda i: (i, 0)),
+            pl.BlockSpec((8,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((blk, 3), lambda i: (i, 0)),
+            pl.BlockSpec((blk, N_DIMS), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, 3), fo.dtype),
+            jax.ShapeDtypeStruct((n, N_DIMS), fo.dtype),
+        ],
+        interpret=interpret,
+    )(fo, relo, tiles, sp, consts)
