@@ -31,7 +31,8 @@ from repro.timeloop.mapping import constrained_random_mapping, mapping_is_valid
 
 def run_model(model: str, n_hw: int = 12, n_sw: int = 60, seeds=(0,),
               baseline_budget: int = 4000, hw_search: str = "bo",
-              engine: str = "batched", backend: str | None = None):
+              engine: str = "batched", backend: str | None = None,
+              gp_refit_every: int = 1):
     from repro.core.swspace import default_backend
 
     backend = backend or default_backend()  # None -> $REPRO_BACKEND or numpy
@@ -48,7 +49,7 @@ def run_model(model: str, n_hw: int = 12, n_sw: int = 60, seeds=(0,),
                            n_sw_trials=n_sw, n_sw_warmup=min(20, n_sw // 3),
                            sw_pool=60, hw_pool=60, seed=seed,
                            batched=batched, use_cache=batched,
-                           backend=backend)
+                           backend=backend, gp_refit_every=gp_refit_every)
             bests.append(res.best_model_edp)
             curves.append(res.hw_result.history)
         else:  # constrained random hardware search (paper's HW baseline)
@@ -184,11 +185,47 @@ def e2e_speedup(model: str = "dqn", n_hw: int = 4, n_sw: int = 40,
     return out
 
 
+def layer_batch_speedup(model: str = "resnet", n_hw: int = 4, n_sw: int = 60,
+                        seed: int = 0, reps: int = 2) -> dict:
+    """Layer-batched nested search vs the sequential-layer path (the PR-2
+    baseline), per backend, on one multi-layer workload set.
+
+    Both sides run the *same* search (same seeds, same per-layer RNG streams;
+    see tests/test_layer_batch.py for the parity pin) -- the comparison
+    isolates what the multi-run engine fuses: per-BO-round evaluation
+    dispatches, surrogate refits, and acquisition scoring.  Each configuration
+    is timed `reps` times interleaved and the per-side minimum is compared,
+    which drops transient machine noise (shared CI hardware) rather than
+    averaging it into the ratio.  JIT caches are warmed untimed."""
+    layers = MODEL_LAYERS[model]
+    kw = dict(n_sw_trials=n_sw, n_sw_warmup=min(20, n_sw // 3),
+              sw_pool=60, hw_pool=60, seed=seed, batched=True, use_cache=True)
+    out: dict = {"model": model, "n_hw": n_hw, "n_sw": n_sw, "reps": reps}
+    for backend in ("numpy", "jax"):
+        for lb in (False, True):
+            codesign(layers, n_hw_trials=1, layer_batched=lb, backend=backend,
+                     **kw)  # warm jit caches / one-time imports
+        times: dict[bool, list[float]] = {False: [], True: []}
+        for _ in range(reps):
+            for lb in (False, True):
+                t0 = time.perf_counter()
+                codesign(layers, n_hw_trials=n_hw, layer_batched=lb,
+                         backend=backend, **kw)
+                times[lb].append(time.perf_counter() - t0)
+        seq_s, batch_s = min(times[False]), min(times[True])
+        out[f"{backend}_sequential_s"] = round(seq_s, 3)
+        out[f"{backend}_batched_s"] = round(batch_s, 3)
+        out[f"{backend}_speedup"] = round(seq_s / batch_s, 2)
+    return out
+
+
 def run(n_hw: int = 12, n_sw: int = 60, seeds=(0,), quiet: bool = False,
-        collect: dict | None = None, backend: str | None = None):
+        collect: dict | None = None, backend: str | None = None,
+        gp_refit_every: int = 1):
     out = {}
     for model in ("resnet", "dqn", "mlp", "transformer"):
-        r = run_model(model, n_hw=n_hw, n_sw=n_sw, seeds=seeds, backend=backend)
+        r = run_model(model, n_hw=n_hw, n_sw=n_sw, seeds=seeds, backend=backend,
+                      gp_refit_every=gp_refit_every)
         out[model] = r
         if not quiet:
             print(f"fig5a,{model},eyeriss={r['eyeriss_edp']:.3e},"
@@ -216,7 +253,7 @@ def _finite(x: float):
     return float(x) if np.isfinite(x) else None
 
 
-def print_speedups(eng: dict, e2e: dict) -> None:
+def print_speedups(eng: dict, e2e: dict, lb: dict | None = None) -> None:
     """CSV lines for the engine/e2e speedup records (shared with run.py)."""
     for name, r in eng["layers"].items():
         print(f"engine,{name},scalar={r['scalar_s']}s,"
@@ -227,6 +264,14 @@ def print_speedups(eng: dict, e2e: dict) -> None:
     print(f"e2e,codesign,scalar={e2e['scalar_s']}s,"
           f"batched={e2e['batched_s']}s,jax={e2e['jax_s']}s,"
           f"speedup={e2e['speedup']}x,jax_speedup={e2e['jax_speedup']}x")
+    if lb is not None:
+        print(f"layer_batch,{lb['model']},"
+              f"numpy_seq={lb['numpy_sequential_s']}s,"
+              f"numpy_batched={lb['numpy_batched_s']}s,"
+              f"numpy_speedup={lb['numpy_speedup']}x,"
+              f"jax_seq={lb['jax_sequential_s']}s,"
+              f"jax_batched={lb['jax_batched_s']}s,"
+              f"jax_speedup={lb['jax_speedup']}x")
 
 
 if __name__ == "__main__":
@@ -240,10 +285,13 @@ if __name__ == "__main__":
     ap.add_argument("--backend", default=None, choices=("numpy", "jax"),
                     help="inner evaluation engine for the co-design runs "
                          "(default: $REPRO_BACKEND or numpy)")
+    ap.add_argument("--gp-refit-every", type=int, default=1,
+                    help="inner-loop surrogate refit stride (GP amortization)")
     args = ap.parse_args()
     if args.speedup:
-        print_speedups(engine_speedup(), e2e_speedup())
+        print_speedups(engine_speedup(), e2e_speedup(), layer_batch_speedup())
     elif args.paper:
-        run(n_hw=50, n_sw=250, seeds=(0, 1, 2), backend=args.backend)
+        run(n_hw=50, n_sw=250, seeds=(0, 1, 2), backend=args.backend,
+            gp_refit_every=args.gp_refit_every)
     else:
-        run(backend=args.backend)
+        run(backend=args.backend, gp_refit_every=args.gp_refit_every)

@@ -20,8 +20,17 @@ engine regression still shows up as a dropped ratio.
     jax_speedup   JAX batch engine vs scalar     (annotating only: jit/dispatch
                                                   timings are noisier)
 
+The multi-layer path is gated through `layer_batch_e2e` -- the layer-batched
+nested search vs the sequential-layer path, per backend (both sides of each
+ratio run the same engine on the same machine, so the ratio is as robust as
+the hot-path ones):
+
+    layer_batch_e2e.numpy_speedup   (gating)
+    layer_batch_e2e.jax_speedup     (annotating only, like jax_speedup)
+
 A missing/invalid previous record is not an error -- first runs and artifact
-expiry just skip the gate with a notice.
+expiry just skip the gate with a notice.  Records written before a metric
+existed skip that metric the same way.
 """
 
 from __future__ import annotations
@@ -51,6 +60,16 @@ def _speedups(record: dict, key: str) -> dict[str, float]:
         if isinstance(r, dict) and isinstance(r.get(key), (int, float))
         and r[key] > 0
     }
+
+
+def _layer_batch_speedups(record: dict, key: str) -> dict[str, float]:
+    """The multi-layer record holds one ratio per backend (keyed by the
+    workload model so the geomean machinery applies unchanged)."""
+    lb = record.get("layer_batch_e2e") or {}
+    v = lb.get(key)
+    if not isinstance(v, (int, float)) or v <= 0:
+        return {}
+    return {str(lb.get("model", "model")): float(v)}
 
 
 def _geomean_ratio(old: dict[str, float], new: dict[str, float]) -> tuple[float | None, list[str]]:
@@ -90,8 +109,19 @@ def main() -> int:
         return 1
 
     failed = False
-    for key, gating in (("speedup", True), ("jax_speedup", False)):
-        ratio, details = _geomean_ratio(_speedups(old, key), _speedups(new, key))
+    for key, extract, gating in (
+        ("speedup", _speedups, True),
+        ("jax_speedup", _speedups, False),
+        ("layer_batch.numpy_speedup", None, True),
+        ("layer_batch.jax_speedup", None, False),
+    ):
+        if extract is None:
+            metric = key.split(".", 1)[1]
+            olds = _layer_batch_speedups(old, metric)
+            news = _layer_batch_speedups(new, metric)
+        else:
+            olds, news = extract(old, key), extract(new, key)
+        ratio, details = _geomean_ratio(olds, news)
         if ratio is None:
             print(f"::notice::compare_bench[{key}]: no shared layers to "
                   "compare (metric added/renamed?); skipping.")

@@ -27,6 +27,9 @@ def main() -> None:
                     help="batched evaluation engine for the co-design section "
                          "(default: $REPRO_BACKEND or numpy; the speedup "
                          "section always times both)")
+    ap.add_argument("--gp-refit-every", type=int, default=1,
+                    help="inner-loop surrogate refit stride (GP amortization "
+                         "knob, threaded to codesign)")
     args, _ = ap.parse_known_args()
 
     from repro.core.swspace import default_backend
@@ -50,15 +53,17 @@ def main() -> None:
     print(f"# Fig. 4 / 5a -- HW/SW co-design vs Eyeriss (backend={backend})")
     if args.paper:
         bo_codesign.run(n_hw=50, n_sw=250, seeds=(0, 1, 2), collect=collect,
-                        backend=backend)
+                        backend=backend, gp_refit_every=args.gp_refit_every)
     else:
         bo_codesign.run(n_hw=12, n_sw=60, seeds=(0,), collect=collect,
-                        backend=backend)
+                        backend=backend, gp_refit_every=args.gp_refit_every)
 
     print("# engines -- hot-path + end-to-end speedups (numpy + jax) vs scalar")
     eng = bo_codesign.engine_speedup()
     e2e = bo_codesign.e2e_speedup()
-    bo_codesign.print_speedups(eng, e2e)
+    print("# layer-batched nested search vs sequential layers (per backend)")
+    lbe = bo_codesign.layer_batch_speedup()
+    bo_codesign.print_speedups(eng, e2e, lbe)
 
     print("# Fig. 5b/5c -- surrogate/acquisition + lambda ablations")
     bo_ablation.run(n_trials=250 if args.paper else 80,
@@ -73,6 +78,7 @@ def main() -> None:
     if collect is not None:
         collect["engine_speedup"] = eng
         collect["e2e_speedup"] = e2e
+        collect["layer_batch_e2e"] = lbe
         collect["backend"] = backend
         collect["paper_budgets"] = bool(args.paper)
         collect["total_s"] = round(total, 1)

@@ -1,28 +1,34 @@
 """The paper's contribution: nested constrained Bayesian optimization for
 hardware/software co-design, plus the beyond-paper TPU sharding autotuner."""
 
-from repro.core.gp import GP, GPClassifier
+from repro.core.gp import GP, GPClassifier, GPClassifierStack, GPStack
 from repro.core.acquisition import expected_improvement, lcb, make_acquisition
-from repro.core.bo import BOResult, bo_maximize
-from repro.core.swspace import SoftwareSpace
+from repro.core.bo import BOResult, bo_maximize, bo_maximize_many
+from repro.core.swspace import LayerStackSpace, SoftwareSpace
 from repro.core.hwspace import HardwareSpace
-from repro.core.nested import CoDesignResult, codesign, optimize_software
+from repro.core.nested import (CoDesignResult, codesign, optimize_software,
+                               optimize_software_many)
 from repro.core.baselines import random_search, relax_round_bo, tvm_style_search
 from repro.core.trees import GradientBoostedTrees, RandomForestSurrogate
 
 __all__ = [
     "GP",
     "GPClassifier",
+    "GPClassifierStack",
+    "GPStack",
     "expected_improvement",
     "lcb",
     "make_acquisition",
     "BOResult",
     "bo_maximize",
+    "bo_maximize_many",
+    "LayerStackSpace",
     "SoftwareSpace",
     "HardwareSpace",
     "CoDesignResult",
     "codesign",
     "optimize_software",
+    "optimize_software_many",
     "random_search",
     "relax_round_bo",
     "tvm_style_search",

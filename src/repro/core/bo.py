@@ -14,8 +14,10 @@ Spaces may implement the *batched evaluation protocol* — `supports_batch`
 (truthy), `sample_pool(rng, n)`, `features_batch(pool)`, `evaluate_batch(pool)`
 (see `repro.timeloop.batch`) — in which case warmup draws and the per-trial
 acquisition pool are sampled, featurized, and scored as whole arrays instead of
-one candidate at a time; spaces without it (e.g. the hardware space, whose
-evaluator is a nested search) transparently fall back to the scalar path.
+one candidate at a time (both the software-mapping space and the hardware
+space implement it; the hardware space's `evaluate_batch` still loops — its
+evaluator is a full nested search); spaces without the protocol transparently
+fall back to the scalar path.
 
 Spaces that additionally expose `supports_device` + `features_batch_device`
 (the JAX engine, `repro.timeloop.batch_jax`) get *device-resident* pool
@@ -25,17 +27,30 @@ argmax index (plus the winner's feature row) crosses back to the host.
 Everything on the host side of that boundary is kept strictly NumPy —
 `np.asarray` at every device edge — so no host computation silently promotes
 to device arrays with a blocking transfer per trial.
+
+`bo_maximize_many` is the *multi-run* engine: it advances L independent
+searches (the nested scheme's per-layer software searches of one hardware
+probe) in lockstep, so per-round work that the sequential path repeats L times
+collapses into one batched program each — one fused device evaluation over all
+runs' candidate pools (`LayerStackSpace` packs them into a single (L*B, 5, 6)
+batch), one batched GP fit over all runs' surrogates (`GPStack`, a `lax.map`
+program), one stacked posterior + acquisition + classifier chain.  Each run
+keeps its own RNG stream
+(seeded exactly as `bo_maximize(seed=...)` would be), its own observation
+history, and its own early-stop mask, so the lockstep engine reproduces L
+sequential `bo_maximize` calls run-for-run.
 """
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Any, Callable
 
 import numpy as np
 
 from repro.core.acquisition import make_acquisition, make_acquisition_device
-from repro.core.gp import GP, GPClassifier
+from repro.core.gp import GP, GPClassifier, GPClassifierStack, GPStack
 from repro.core.trees import RandomForestSurrogate
 
 
@@ -43,6 +58,31 @@ class InfeasibleSpace(RuntimeError):
     """Raised when input-constraint rejection sampling cannot find any valid
     point -- the search space itself is (empirically) empty.  At the hardware
     level this is the paper's *unknown constraint*."""
+
+
+@contextlib.contextmanager
+def _backend_override(spaces, backend: str):
+    """Engine override for spaces that carry one, scoped to one run -- the
+    callers' spaces are restored on the way out.  Unknown values and spaces
+    without backend selection are reported, never ignored.  Shared by
+    `bo_maximize` and `bo_maximize_many`."""
+    from repro.core.swspace import BACKENDS
+
+    if backend not in BACKENDS:
+        raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
+    for s in spaces:
+        if not hasattr(s, "backend"):
+            raise ValueError(
+                f"space {getattr(s, 'name', s)!r} does not support "
+                "backend selection")
+    prev = [s.backend for s in spaces]
+    for s in spaces:
+        s.backend = backend
+    try:
+        yield
+    finally:
+        for s, b in zip(spaces, prev):
+            s.backend = b
 
 
 @dataclasses.dataclass
@@ -70,28 +110,13 @@ def bo_maximize(
     backend: str | None = None,
 ) -> BOResult:
     if backend is not None:
-        # Engine override for spaces that carry one, scoped to this run --
-        # the caller's space is restored on the way out.  Unknown values and
-        # spaces without backend selection are reported, never ignored.
-        from repro.core.swspace import BACKENDS
-
-        if backend not in BACKENDS:
-            raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
-        if not hasattr(space, "backend"):
-            raise ValueError(
-                f"space {getattr(space, 'name', space)!r} does not support "
-                "backend selection")
-        prev_backend = space.backend
-        space.backend = backend
-        try:
+        with _backend_override([space], backend):
             return bo_maximize(
                 space, n_trials=n_trials, n_warmup=n_warmup,
                 pool_size=pool_size, acquisition=acquisition, lam=lam,
                 surrogate=surrogate, noisy=noisy, seed=seed,
                 gp_refit_every=gp_refit_every, callback=callback,
             )
-        finally:
-            space.backend = prev_backend
     rng = np.random.default_rng(seed)
     acq = make_acquisition(acquisition, lam)
     acq_dev = None
@@ -221,3 +246,291 @@ def bo_maximize(
             callback(t, result)
 
     return result
+
+
+@dataclasses.dataclass
+class _Cohort:
+    """One stacked surrogate fit shared by a set of runs: the `GPStack` (and
+    the classifier stack for the subset of its runs that have observed
+    unknown-constraint violations), plus the absolute run indices in stack
+    order.  With `gp_refit_every == 1` there is exactly one live cohort; with
+    a larger stride, runs whose surrogate first became fittable off-schedule
+    sit in their own cohort until the next aligned refit (mirroring the
+    per-run `model is None or t % gp_refit_every == 0` schedule of
+    `bo_maximize`)."""
+
+    model: GPStack
+    clf: GPClassifierStack | None
+    runs: list[int]
+    clf_runs: list[int]
+
+
+def bo_maximize_many(
+    spaces,
+    n_trials: int = 250,
+    n_warmup: int = 30,
+    pool_size: int = 150,
+    acquisition: str = "lcb",
+    lam: float = 1.0,
+    surrogate: str = "gp_linear",
+    noisy: bool = False,
+    seed: int = 0,
+    gp_refit_every: int = 1,
+    callback: Callable[[int, list[BOResult]], None] | None = None,
+    backend: str | None = None,
+) -> list[BOResult]:
+    """Advance L independent BO runs in lockstep; returns one `BOResult` per
+    space, matching ``[bo_maximize(s, ...) for s in spaces]`` run-for-run
+    (each run draws from its own RNG stream seeded with `seed`, exactly as the
+    sequential calls would).
+
+    Per round, the L-fold repeated work becomes one batched program each:
+    candidate pools are featurized by a single fused device dispatch when the
+    spaces stack (`LayerStackSpace`; per-space batched calls otherwise), the
+    per-run surrogates are refit as one batched `GPStack`, and the posterior /
+    acquisition / feasibility-classifier scoring runs over the stacked pools
+    at once (device-resident end-to-end on the JAX engine).
+
+    A run whose space proves empirically unsampleable finishes early with an
+    empty `BOResult` (best_point None) instead of raising `InfeasibleSpace` --
+    the other runs continue; this matches how the nested driver treats a
+    layer with no feasible mapping.  Tree surrogates and non-batched spaces
+    fall back to sequential `bo_maximize` calls.
+
+    `callback`, when given, receives `(trial_index, results_list)` once per
+    lockstep round (not per run; on the sequential fallback it fires per
+    advancing run, with empty placeholders for runs not yet started)."""
+    spaces = list(spaces)
+    L = len(spaces)
+    if L == 0:
+        return []
+    if backend is not None:
+        with _backend_override(spaces, backend):
+            return bo_maximize_many(
+                spaces, n_trials=n_trials, n_warmup=n_warmup,
+                pool_size=pool_size, acquisition=acquisition, lam=lam,
+                surrogate=surrogate, noisy=noisy, seed=seed,
+                gp_refit_every=gp_refit_every, callback=callback,
+            )
+
+    stackable = (
+        surrogate in ("gp_linear", "gp_se")
+        and all(getattr(s, "supports_batch", False) for s in spaces)
+        and L > 1
+    )
+    if not stackable:
+        # Sequential fallback: tree surrogates are host-only (no stacked fit),
+        # scalar-protocol spaces have nothing to stack, and a single run gains
+        # nothing from lockstep.  Per-run infeasibility still maps to an empty
+        # result so both paths have one contract.  The callback keeps its
+        # (trial, results_list) shape -- runs advance one after another here,
+        # so it fires once per (run, trial) with the completed runs' results,
+        # the advancing run's live result, and empty placeholders for runs
+        # not yet started.
+        out: list[BOResult] = []
+        for i, s in enumerate(spaces):
+            cb = None
+            if callback is not None:
+                rest = [BOResult(None, -np.inf, [], [], [])
+                        for _ in spaces[i + 1:]]
+                cb = lambda t, r, _rest=rest: callback(t, out + [r] + _rest)
+            try:
+                out.append(bo_maximize(
+                    s, n_trials=n_trials, n_warmup=n_warmup,
+                    pool_size=pool_size, acquisition=acquisition, lam=lam,
+                    surrogate=surrogate, noisy=noisy, seed=seed,
+                    gp_refit_every=gp_refit_every, callback=cb))
+            except InfeasibleSpace:
+                out.append(BOResult(None, -np.inf, [], [], []))
+        return out
+
+    from repro.core.swspace import LayerStackSpace
+
+    stack = LayerStackSpace.maybe(spaces)
+    use_device = (
+        stack is not None
+        and stack.supports_device
+        and surrogate in ("gp_linear", "gp_se")
+    )
+    kind = {"gp_linear": "linear", "gp_se": "se"}[surrogate]
+
+    rngs = [np.random.default_rng(seed) for _ in spaces]
+    acq = make_acquisition(acquisition, lam)
+    acq_dev = make_acquisition_device(acquisition, lam) if use_device else None
+
+    results = [BOResult(None, -np.inf, [], [], []) for _ in spaces]
+    X_feas: list[list[np.ndarray]] = [[] for _ in spaces]
+    y_feas: list[list[float]] = [[] for _ in spaces]
+    X_all: list[list[np.ndarray]] = [[] for _ in spaces]
+    feas_all: list[list[bool]] = [[] for _ in spaces]
+    alive = [True] * L
+    cohort_of: list[_Cohort | None] = [None] * L
+
+    def kill(k: int) -> None:
+        """Early-stop mask: the run's space proved unsampleable -> finish it
+        with an empty result (the sequential path's InfeasibleSpace outcome)."""
+        alive[k] = False
+        results[k] = BOResult(None, -np.inf, [], [], [])
+
+    def observe(k: int, point, feats=None, outcome=None) -> None:
+        feats = spaces[k].features(point) if feats is None else feats
+        value, feasible = spaces[k].evaluate(point) if outcome is None else outcome
+        X_all[k].append(feats)
+        feas_all[k].append(feasible)
+        r = results[k]
+        r.points.append(point)
+        if feasible:
+            X_feas[k].append(feats)
+            y_feas[k].append(value)
+            if value > r.best_value:
+                r.best_value, r.best_point = value, point
+            r.values.append(value)
+        else:
+            r.n_infeasible += 1
+            r.values.append(-np.inf)
+        r.history.append(r.best_value)
+
+    # --- warmup: one stacked evaluation over all runs' warmup pools -----------
+    n_warm = min(n_warmup, n_trials)
+    if n_warm:
+        pools = []
+        for k in range(L):
+            p = spaces[k].sample_pool(rngs[k], n_warm)
+            if p is None:
+                kill(k)
+                p = None
+            pools.append(p)
+        live = [k for k in range(L) if alive[k]]
+        if live:
+            if stack is not None:
+                full = [p if p is not None else stack.placeholder_pool(n_warm)
+                        for p in pools]
+                fwd = stack.forward_stacked(full, runs=live)
+                feats_w, vals_w, feas_w = (
+                    fwd["features"], fwd["utility"], fwd["valid"])
+            else:
+                d = spaces[0].feature_dim
+                feats_w = np.zeros((L, n_warm, d))
+                vals_w = np.full((L, n_warm), -np.inf)
+                feas_w = np.zeros((L, n_warm), dtype=bool)
+                for k in live:
+                    feats_w[k] = spaces[k].features_batch(pools[k])
+                    vals_w[k], feas_w[k] = spaces[k].evaluate_batch(pools[k])
+            for k in live:
+                for i in range(n_warm):
+                    observe(k, pools[k][i], feats=feats_w[k, i],
+                            outcome=(vals_w[k, i], bool(feas_w[k, i])))
+
+    # --- lockstep trials ------------------------------------------------------
+    for t in range(n_warm, n_trials):
+        if not any(alive):
+            break
+        # Refit cohort: every run whose surrogate is due this round, fit as
+        # ONE batched GPStack (+ one classifier stack for the runs that have
+        # seen unknown-constraint violations).
+        need = [k for k in range(L)
+                if alive[k] and len(y_feas[k]) >= 2
+                and (cohort_of[k] is None or t % gp_refit_every == 0)]
+        if need:
+            gps = GPStack(kind=kind, noisy=noisy).fit(
+                [np.stack(X_feas[k]) for k in need],
+                [np.asarray(y_feas[k]) for k in need])
+            clf_runs = [k for k in need if not all(feas_all[k])]
+            clf = (GPClassifierStack().fit(
+                       [np.stack(X_all[k]) for k in clf_runs],
+                       [np.asarray(feas_all[k]) for k in clf_runs])
+                   if clf_runs else None)
+            cohort = _Cohort(gps, clf, need, clf_runs)
+            for k in need:
+                cohort_of[k] = cohort
+
+        # Runs without a surrogate yet keep sampling (scalar, like the
+        # sequential path: one candidate, scalar features + evaluation).
+        for k in range(L):
+            if alive[k] and cohort_of[k] is None:
+                p = spaces[k].sample_pool(rngs[k], 1)
+                if p is None:
+                    kill(k)
+                else:
+                    observe(k, p[0])
+
+        scoring = [k for k in range(L) if alive[k] and cohort_of[k] is not None]
+        if scoring:
+            pools = [None] * L
+            for k in scoring:
+                pools[k] = spaces[k].sample_pool(rngs[k], pool_size)
+                if pools[k] is None:
+                    kill(k)
+            scoring = [k for k in scoring if alive[k]]
+        if scoring:
+            feats = feats_dev = None
+            if stack is not None:
+                full = [p if p is not None else stack.placeholder_pool(pool_size)
+                        for p in pools]
+                if use_device:
+                    feats_dev = stack.features_stacked_device(full)
+                else:
+                    feats = stack.features_stacked(full, runs=scoring)
+            else:
+                d = spaces[0].feature_dim
+                feats = np.zeros((L, pool_size, d))
+                for k in scoring:
+                    feats[k] = spaces[k].features_batch(pools[k])
+
+            scoring_set = set(scoring)
+            cohorts = list({id(cohort_of[k]): cohort_of[k] for k in scoring}.values())
+            for cohort in cohorts:
+                runs = cohort.runs
+                best = np.array([[results[k].best_value] for k in runs])
+                if use_device:
+                    import jax.numpy as jnp
+                    from jax.experimental import enable_x64
+
+                    # The stacked features are f64 device arrays; every op on
+                    # them (gathers included) must trace under scoped x64 --
+                    # and the incumbents must enter as f64 (like the
+                    # sequential path's Python-float best) or EI loses
+                    # precision.
+                    with enable_x64():
+                        sub = feats_dev[jnp.asarray(runs)]
+                    if cohort.clf is None:
+                        # Hot case (the inner software searches sample
+                        # input-valid pools, so no classifier ever fits):
+                        # posterior + acquisition + argmax + winner gather
+                        # fused into one dispatch.
+                        idx, rows = cohort.model.score_device(
+                            sub, best, acquisition, lam)
+                    else:
+                        with enable_x64():
+                            mu, var = cohort.model.posterior_device(sub)
+                            util = acq_dev(mu, var, jnp.asarray(best))
+                            pos = jnp.asarray(
+                                [runs.index(k) for k in cohort.clf_runs])
+                            probs = cohort.clf.prob_feasible_device(
+                                feats_dev[jnp.asarray(cohort.clf_runs)])
+                            util = util.at[pos].multiply(probs)
+                            idx = np.asarray(jnp.argmax(util, axis=1))
+                            rows = np.asarray(
+                                jnp.take_along_axis(
+                                    sub, jnp.asarray(idx)[:, None, None],
+                                    axis=1)[:, 0, :],
+                                dtype=np.float64)
+                else:
+                    sub = feats[np.asarray(runs)]
+                    mu, var = cohort.model.posterior(sub)
+                    util = acq(mu, var, best)
+                    if cohort.clf is not None:
+                        pos = [runs.index(k) for k in cohort.clf_runs]
+                        util[pos] = util[pos] * np.asarray(
+                            cohort.clf.prob_feasible(
+                                feats[np.asarray(cohort.clf_runs)]))
+                    idx = np.argmax(util, axis=1)
+                    rows = sub[np.arange(len(runs)), idx]
+                for r, k in enumerate(runs):
+                    if k in scoring_set:
+                        observe(k, pools[k][int(idx[r])],
+                                feats=np.asarray(rows[r], dtype=np.float64))
+        if callback:
+            callback(t, results)
+
+    return results

@@ -7,6 +7,17 @@ hundred), so exact Cholesky GPs are cheap; to keep the jitted fit fast on CPU we
 pad X/y to bucketed sizes (powers of two) with masked-out rows so the compiled
 function is reused across BO iterations.
 
+`GPStack` / `GPClassifierStack` fit and query L *independent* GPs as one
+batched program (`lax.map` over the leading run axis: batched Cholesky
+solves for the fit, one device posterior over the stacked candidate pools).
+The layer-batched nested search uses this to replace L sequential per-layer
+surrogate refits -- the end-to-end bottleneck once the evaluation engine is
+vectorized -- with a single batched fit per BO round.  Padding is *exactly*
+zero-influence (masked kernel rows make the padded block of the Cholesky
+factor decouple: alpha is exactly 0 on padded rows, and the NLL masks their
+logdet terms), so each slice of a stack reproduces the corresponding
+individual `GP` fit regardless of how runs are padded to the shared bucket.
+
 The Cholesky solves need float64, but that is scoped to the GP computations via
 the `jax.experimental.enable_x64` context -- importing this module does NOT flip
 the process-global x64 flag (which would silently force every other JAX program
@@ -28,6 +39,10 @@ from scipy.special import erf as _erf
 
 _JITTER = 1e-6
 _PAD_NOISE = 1e6  # effective infinite noise on padded rows -> zero influence
+# Stacked linear-kernel fits switch to the O(n d^2) Woodbury NLL above this
+# many (padded) data rows; below it the O(n^3) Cholesky NLL is cheap and keeps
+# the stacked fit bit-identical to the sequential one (see `_fit_stack`).
+_LOWRANK_MIN_ROWS = 32
 
 
 def _bucket(n: int) -> int:
@@ -63,6 +78,39 @@ def _init_params(kind: str, dim: int) -> dict:
     raise ValueError(kind)
 
 
+def _nll_linear_lowrank(params, X, y, mask):
+    """`_nll(kind="linear")` via Woodbury -- same value, O(n d^2) not O(n^3).
+
+    The linear kernel is rank d+1: K = (M V0)(M V0)^T + bias^2 (M 1)(M 1)^T
+    + D with V0 = X * w, M = diag(mask), D the masked noise/pad diagonal.
+    With V = M [V0, bias 1] (n, d+1) and A = I + V^T D^-1 V:
+
+      quad            r^T K^-1 r = r^T D^-1 r - u^T A^-1 u,  u = V^T D^-1 r
+      masked logdet   sum_masked log D_ii + logdet A
+
+    (pad rows have V = 0 and r = 0, so they drop out of both terms exactly,
+    matching the masked Cholesky logdet of `_nll`).  Used by the stacked
+    multi-run fit, where the surrogate refit is the dominant per-trial cost;
+    agrees with `_nll` to f64 roundoff (~1e-12 relative), parity-tested."""
+    n = X.shape[0]
+    noise = jnp.exp(2.0 * params["log_tau"])
+    diag = jnp.where(mask > 0.5, noise + _JITTER, _PAD_NOISE)
+    w = jnp.exp(params["log_w"])
+    V = jnp.concatenate(
+        [X * w, jnp.full((n, 1), jnp.exp(params["log_bias"]))], axis=1)
+    V = V * mask[:, None]
+    r = jnp.where(mask > 0.5, y - params["mean_const"], 0.0)
+    Vd = V / diag[:, None]
+    A = jnp.eye(V.shape[1], dtype=X.dtype) + V.T @ Vd
+    La = jnp.linalg.cholesky(A)
+    u = Vd.T @ r
+    quad = r @ (r / diag) - u @ jax.scipy.linalg.cho_solve((La, True), u)
+    logdet = (jnp.sum(jnp.where(mask > 0.5, jnp.log(diag), 0.0))
+              + 2.0 * jnp.sum(jnp.log(jnp.diagonal(La))))
+    n_eff = jnp.sum(mask)
+    return 0.5 * (quad + logdet + n_eff * jnp.log(2.0 * jnp.pi))
+
+
 @functools.partial(jax.jit, static_argnames=("kind",))
 def _nll(params, X, y, mask, kind):
     k = KERNELS[kind]
@@ -80,9 +128,20 @@ def _nll(params, X, y, mask, kind):
     return 0.5 * (quad + logdet + n_eff * jnp.log(2.0 * jnp.pi))
 
 
-@functools.partial(jax.jit, static_argnames=("kind", "steps", "lr", "train_tau"))
-def _fit(params, X, y, mask, kind, steps=80, lr=0.05, train_tau=True):
-    grad_fn = jax.grad(_nll)
+@functools.partial(jax.jit,
+                   static_argnames=("kind", "steps", "lr", "train_tau",
+                                    "lowrank"))
+def _fit(params, X, y, mask, kind, steps=80, lr=0.05, train_tau=True,
+         lowrank=False):
+    # lowrank: optimize the Woodbury form of the linear-kernel NLL (same
+    # function to f64 roundoff, O(n d^2) per step) -- the stacked multi-run
+    # fit uses it; the single-run path keeps the Cholesky NLL.
+    if lowrank:
+        assert kind == "linear", "lowrank NLL exists for the linear kernel"
+        grad_fn = jax.grad(
+            lambda p, xx, yy, mm, _k: _nll_linear_lowrank(p, xx, yy, mm))
+    else:
+        grad_fn = jax.grad(_nll)
 
     def adam_step(carry, _):
         p, m, v, t = carry
@@ -217,6 +276,209 @@ class GPClassifier:
         if self._gp is None:
             return jnp.ones(len(Xs))
         mu, var = self._gp.posterior_device(Xs)
+        with enable_x64():
+            z = mu / jnp.sqrt(1.0 + var)
+            return 0.5 * (1.0 + jax.scipy.special.erf(z / np.sqrt(2.0)))
+
+
+# --- stacked (multi-run) GPs ----------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("kind", "steps", "train_tau"))
+def _fit_stack(params, X, y, mask, kind, steps, train_tau):
+    """Batched `_fit` over the leading run axis (params leaves lead with L).
+
+    `lax.map` rather than `vmap`: one compiled program / one dispatch either
+    way, but per-slice execution keeps the single-GP linalg kernels, which on
+    CPU beat the batched-cholesky lowering badly as the data bucket grows
+    (~2.5x at 128 rows) while matching it below.  Per-slice numerics are the
+    single-run `_fit`'s exactly.  (On accelerators with real batched linalg
+    the vmap form may win again -- revisit with a hardware run.)
+
+    Above `_LOWRANK_MIN_ROWS` data rows the linear kernel (the objective
+    surrogate) fits through the Woodbury NLL (`lowrank=True`): the per-trial
+    refit is the layer-batched search's dominant cost, and the low-rank form
+    cuts it from O(n^3) to O(n d^2) per Adam step.  It computes the same NLL
+    to f64 roundoff, but through the ill-conditioned quad-term subtraction its
+    gradients drift from the Cholesky path's by ~1e-8 relative, which after 80
+    Adam steps perturbs the posterior at the ~1e-7 level -- statistically
+    nothing, but not the bit-identical-to-sequential regime the small buckets
+    keep (the bucket is a static shape, so the switch is deterministic and
+    visible in the jit cache, and searches that never exceed the threshold
+    reproduce L sequential `bo_maximize` runs exactly)."""
+    lowrank = kind == "linear" and X.shape[1] > _LOWRANK_MIN_ROWS
+    return jax.lax.map(
+        lambda a: _fit(a[0], a[1], a[2], a[3], kind, steps, 0.05, train_tau,
+                       lowrank=lowrank),
+        (params, X, y, mask))
+
+
+@functools.partial(jax.jit, static_argnames=("kind",))
+def _posterior_stack(params, X, y, mask, Xs, kind):
+    """Batched `_posterior`: (L, P, d) pools -> (L, P) mu/var (lax.map, see
+    `_fit_stack`)."""
+    return jax.lax.map(
+        lambda a: _posterior(a[0], a[1], a[2], a[3], a[4], kind),
+        (params, X, y, mask, Xs))
+
+
+def _bucket_stack(n: int) -> int:
+    """Finer-grained buckets for the stacked fit: multiples of 8 up to 64
+    rows, multiples of 32 beyond.  The multi-run surrogate refit dominates the
+    layer-batched search's per-trial cost, so the padding waste of
+    power-of-two buckets (rows up to 2x -> Cholesky flops up to 8x just below
+    a boundary) costs more than the extra compile-cache entries.  Padding
+    rows are exactly zero-influence (see module docstring), so the bucket
+    choice is purely a flops/compile-count tradeoff -- results are
+    unchanged."""
+    if n <= 8:
+        return 8
+    step = 8 if n <= 64 else 32
+    return -(-n // step) * step
+
+
+def _pad_runs(Xs, ys) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Stack ragged per-run datasets to (L, b, d)/(L, b) with (L, b) masks,
+    b = shared fine-grained bucket over the largest run."""
+    L = len(Xs)
+    d = Xs[0].shape[1]
+    b = _bucket_stack(max(len(y) for y in ys))
+    X = np.zeros((L, b, d))
+    y = np.zeros((L, b))
+    mask = np.zeros((L, b))
+    for k, (Xk, yk) in enumerate(zip(Xs, ys)):
+        n = len(yk)
+        X[k, :n], y[k, :n], mask[k, :n] = Xk, yk, 1.0
+    return X, y, mask
+
+
+@functools.lru_cache(maxsize=None)
+def _acq_device_cached(name: str, lam: float):
+    """One device-acquisition closure per (name, lam): the SAME function the
+    op-by-op scoring paths use, with a stable identity so it can serve as a
+    static jit argument of `_score_stack` (a fresh closure per call would
+    defeat the jit cache)."""
+    from repro.core.acquisition import make_acquisition_device
+
+    return make_acquisition_device(name, lam)
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "acq_fn"))
+def _score_stack(params, X, y, mask, feats, best, kind, acq_fn):
+    """Fused multi-run pool scoring: stacked posterior + acquisition + per-run
+    argmax + winner-row gather, one compiled program.  The acquisition is the
+    `make_acquisition_device` closure itself (traced inline), so the fused
+    path computes exactly what the op-by-op paths compute -- no second copy of
+    the acquisition math to drift."""
+    mu, var = _posterior_stack(params, X, y, mask, feats, kind)
+    util = acq_fn(mu, var, best)
+    idx = jnp.argmax(util, axis=1)
+    rows = jnp.take_along_axis(feats, idx[:, None, None], axis=1)[:, 0, :]
+    return idx, rows
+
+
+@dataclasses.dataclass
+class GPStack:
+    """L independent exact GP regressors, fit and queried as one batched
+    program.  Per-slice numerics match the individual `GP` (same `_fit` /
+    `_posterior` bodies per slice of a `lax.map`; padding is exactly
+    zero-influence),
+    so a stacked multi-run BO engine reproduces L sequential runs.
+
+    kind / noisy / steps: as on `GP`, shared across the stack (the runs are
+    peers -- per-layer searches of one hardware probe).
+    """
+
+    kind: str = "linear"
+    noisy: bool = True
+    steps: int = 80
+    _state: tuple | None = None
+
+    def fit(self, Xs, ys) -> "GPStack":
+        """Fit from per-run datasets: Xs[k] is (n_k, d), ys[k] is (n_k,)."""
+        Xs = [np.asarray(Xk, np.float64) for Xk in Xs]
+        ys = [np.asarray(yk, np.float64) for yk in ys]
+        X, y, mask = _pad_runs(Xs, ys)
+        L, _, d = X.shape
+        with enable_x64():
+            params = jax.tree.map(
+                lambda leaf: jnp.broadcast_to(leaf, (L, *leaf.shape)),
+                _init_params(self.kind, d))
+            params = dict(
+                params,
+                mean_const=jnp.asarray([float(yk.mean()) for yk in ys]),
+                log_tau=jnp.asarray(
+                    [np.log(max(yk.std(), 1e-3) * 0.1) for yk in ys]
+                    if self.noisy else [-6.0] * L),
+            )
+            params = _fit_stack(params, jnp.asarray(X), jnp.asarray(y),
+                                jnp.asarray(mask), self.kind, self.steps,
+                                self.noisy)
+            self._state = (params, jnp.asarray(X), jnp.asarray(y),
+                           jnp.asarray(mask))
+        return self
+
+    def __len__(self) -> int:
+        return int(self._state[1].shape[0]) if self._state else 0
+
+    def posterior(self, Xs) -> tuple[np.ndarray, np.ndarray]:
+        mu, var = self.posterior_device(Xs)
+        return np.asarray(mu), np.asarray(var)
+
+    def posterior_device(self, Xs) -> tuple[jax.Array, jax.Array]:
+        """Stacked posterior: Xs is (L, P, d) -- one candidate pool per run --
+        returning (L, P) device arrays (the fused multi-run scoring path)."""
+        assert self._state is not None, "fit() first"
+        params, Xp, yp, mask = self._state
+        with enable_x64():
+            Xs = jnp.asarray(Xs, jnp.float64)
+            return _posterior_stack(params, Xp, yp, mask, Xs, self.kind)
+
+    def score_device(
+        self, feats, best, acquisition: str = "lcb", lam: float = 1.0,
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """One-dispatch pool scoring for the multi-run BO trial: stacked
+        posterior, acquisition (vs per-run incumbents `best`, shape (L, 1)),
+        per-run argmax, and the winners' feature rows -- only the (L,) indices
+        and (L, d) rows return to the host."""
+        assert self._state is not None, "fit() first"
+        params, Xp, yp, mask = self._state
+        acq_fn = _acq_device_cached(acquisition, float(lam))
+        with enable_x64():
+            idx, rows = _score_stack(
+                params, Xp, yp, mask,
+                jnp.asarray(feats, jnp.float64), jnp.asarray(best, jnp.float64),
+                self.kind, acq_fn)
+        return np.asarray(idx), np.asarray(rows, dtype=np.float64)
+
+
+@dataclasses.dataclass
+class GPClassifierStack:
+    """Stacked twin of `GPClassifier`: L per-run feasibility classifiers
+    (SE-kernel GP regression on +/-1 labels, probit link) fit as one batched
+    program for the multi-run BO engine's unknown-constraint weighting."""
+
+    steps: int = 80
+    _stack: GPStack | None = None
+
+    def fit(self, Xs, feas) -> "GPClassifierStack":
+        ys = [np.where(np.asarray(f), 1.0, -1.0) for f in feas]
+        self._stack = GPStack(kind="se", noisy=True, steps=self.steps).fit(Xs, ys)
+        return self
+
+    def prob_feasible(self, Xs) -> np.ndarray:
+        """Host-side (L, P) P(feasible) -- NumPy + scipy erf, mirroring
+        `GPClassifier.prob_feasible` exactly so the multi-run host scoring
+        path picks the same candidates as L sequential runs."""
+        assert self._stack is not None, "fit() first"
+        mu, var = self._stack.posterior(Xs)
+        z = mu / np.sqrt(1.0 + var)
+        return 0.5 * (1.0 + _erf(z / np.sqrt(2.0)))
+
+    def prob_feasible_device(self, Xs) -> jax.Array:
+        """(L, P) P(feasible) as device arrays (see `GPClassifier` notes on
+        erf precision under scoped x64)."""
+        assert self._stack is not None, "fit() first"
+        mu, var = self._stack.posterior_device(Xs)
         with enable_x64():
             z = mu / jnp.sqrt(1.0 + var)
             return 0.5 * (1.0 + jax.scipy.special.erf(z / np.sqrt(2.0)))

@@ -6,6 +6,16 @@ exist / can the inner optimizer find one" -- surfaces through evaluate() and is
 modeled by the SE-kernel GP classifier in the BO loop.  Hardware evaluation is
 noisy (the inner SW search is stochastic), so the objective GP keeps a learned
 noise kernel.
+
+The space implements the BO loop's *batched evaluation protocol*
+(`supports_batch` / `sample_pool` / `features_batch` / `evaluate_batch`): the
+150-candidate acquisition pools are drawn by the array-vectorized sampler
+(`arch.sample_hardware_pool`) and featurized as one packed (n, 11) matrix
+instead of one config at a time.  Evaluation stays scalar underneath --
+scoring one hardware point *is* a full inner software search, so
+`evaluate_batch` (used only for the handful of warmup points) simply loops;
+the batching win is in pool construction and featurization, which run once
+per outer BO trial.
 """
 
 from __future__ import annotations
@@ -15,7 +25,8 @@ from typing import Callable
 
 import numpy as np
 
-from repro.timeloop.arch import HardwareConfig, hw_is_valid, sample_hardware
+from repro.timeloop.arch import (HardwareConfig, hw_is_valid, sample_hardware,
+                                 sample_hardware_pool)
 
 HW_FEATURE_NAMES = (
     "mesh_x_ratio",       # PE mesh-X / GB mesh-X  (Fig. 13)
@@ -39,9 +50,10 @@ class HardwareSpace:
     # evaluate_fn(hw) -> (utility | None, feasible); injected by the nested driver.
     evaluate_fn: Callable[[HardwareConfig], tuple[float | None, bool]] | None = None
     name: str = "hardware"
-    # Evaluating one hardware point is a full inner software search, so there is
-    # nothing to vectorize at this level: the BO loop takes its scalar path.
-    supports_batch: bool = False
+    # Pool sampling + featurization take the packed-array protocol; evaluation
+    # itself is the nested inner search and stays scalar (see module
+    # docstring).  Set False to force the scalar reference path.
+    supports_batch: bool = True
 
     @property
     def feature_dim(self) -> int:
@@ -77,3 +89,51 @@ class HardwareSpace:
     def evaluate(self, hw: HardwareConfig) -> tuple[float | None, bool]:
         assert self.evaluate_fn is not None, "inject evaluate_fn (nested driver)"
         return self.evaluate_fn(hw)
+
+    # --- batched evaluation protocol --------------------------------------------
+
+    def sample_pool(self, rng, n: int) -> list[HardwareConfig]:
+        """n input-valid configs, array-vectorized draws (every draw satisfies
+        the structural constraints by construction, so no rejection rounds)."""
+        return sample_hardware_pool(rng, n, num_pes=self.num_pes, base=self.base)
+
+    def features_batch(self, pool) -> np.ndarray:
+        """(n, 11) feature matrix computed as whole-array column ops."""
+        cols = np.array(
+            [
+                [hw.pe_mesh_x, hw.pe_mesh_y, hw.gb_mesh_x, hw.gb_mesh_y,
+                 hw.lb_input, hw.lb_weight, hw.lb_output, hw.lb_budget,
+                 hw.gb_instances, hw.gb_bandwidth, hw.df_fw, hw.df_fh]
+                for hw in pool
+            ],
+            dtype=np.float64,
+        ).T
+        (mx, my, gx, gy, li, lw, lo, budget, gbi, gbbw, fw, fh) = cols
+        return np.stack(
+            [
+                mx / gx,
+                my / gy,
+                np.log1p(mx),
+                np.log1p(my),
+                li / budget,
+                lw / budget,
+                lo / budget,
+                np.log1p(gbi),
+                np.log1p(gbbw),
+                fw - 1.0,
+                fh - 1.0,
+            ],
+            axis=1,
+        )
+
+    def evaluate_batch(self, pool) -> tuple[np.ndarray, np.ndarray]:
+        """Scalar evaluation per config (each is a full inner software search;
+        only the BO warmup calls this, on a handful of points)."""
+        vals = np.full(len(pool), -np.inf)
+        feas = np.zeros(len(pool), dtype=bool)
+        for i, hw in enumerate(pool):
+            v, ok = self.evaluate(hw)
+            feas[i] = ok
+            if ok:
+                vals[i] = v
+        return vals, feas

@@ -6,6 +6,15 @@ mappings (250 trials in the paper); layer-wise EDPs are summed into the model
 EDP that the hardware optimizer sees.  The hardware objective is noisy (the
 inner search is stochastic) -> noise kernel on; a hardware point with no
 discoverable mapping for some layer is an *unknown-constraint* violation.
+
+The per-layer searches of one hardware probe are independent, so on the JAX
+backend `eval_hw` advances them *layer-batched*: one `bo_maximize_many` call
+replaces the L sequential per-layer `optimize_software` runs, collapsing each
+BO round's L evaluation dispatches and L surrogate refits into one fused
+device program plus one batched GP fit (`codesign(layer_batched=...)`; the
+default picks layer-batched exactly when the backend is "jax" and falls back
+to the sequential path on NumPy).  The (hw, layer) result cache is shared by
+both paths.
 """
 
 from __future__ import annotations
@@ -15,9 +24,10 @@ from typing import Sequence
 
 import numpy as np
 
-from repro.core.bo import BOResult, InfeasibleSpace, bo_maximize
+from repro.core.bo import (BOResult, InfeasibleSpace, bo_maximize,
+                           bo_maximize_many)
 from repro.core.hwspace import HardwareSpace
-from repro.core.swspace import SoftwareSpace
+from repro.core.swspace import SoftwareSpace, default_backend
 from repro.timeloop.arch import HardwareConfig
 from repro.timeloop.mapping import Mapping
 from repro.timeloop.model import evaluate
@@ -45,6 +55,7 @@ def optimize_software(
     seed: int = 0,
     batched: bool = True,
     backend: str | None = None,  # evaluation engine: "numpy" | "jax"
+    gp_refit_every: int = 1,
 ) -> BOResult:
     space = SoftwareSpace(hw, layer, batched=batched, backend=backend)
     try:
@@ -58,11 +69,48 @@ def optimize_software(
             surrogate=surrogate,
             noisy=False,  # deterministic evaluator (paper §4.3)
             seed=seed,
+            gp_refit_every=gp_refit_every,
         )
     except InfeasibleSpace:
         # No feasible mapping could even be sampled -> report an empty result;
         # the hardware level treats this as an unknown-constraint violation.
         return BOResult(None, -np.inf, [], [], [])
+
+
+def optimize_software_many(
+    hw: HardwareConfig,
+    layers: Sequence[ConvLayer],
+    n_trials: int = 250,
+    n_warmup: int = 30,
+    pool_size: int = 150,
+    acquisition: str = "lcb",
+    lam: float = 1.0,
+    surrogate: str = "gp_linear",
+    seed: int = 0,
+    batched: bool = True,
+    backend: str | None = None,
+    gp_refit_every: int = 1,
+) -> list[BOResult]:
+    """Layer-batched twin of `optimize_software`: the L per-layer searches of
+    one hardware probe advance in lockstep through `bo_maximize_many` (each
+    seeded exactly as the sequential per-layer calls would be), one fused
+    evaluation program + one stacked surrogate fit per BO round.  A layer with
+    no sampleable mapping yields an empty `BOResult` (best_point None), same
+    as `optimize_software`'s InfeasibleSpace handling."""
+    spaces = [SoftwareSpace(hw, layer, batched=batched, backend=backend)
+              for layer in layers]
+    return bo_maximize_many(
+        spaces,
+        n_trials=n_trials,
+        n_warmup=n_warmup,
+        pool_size=pool_size,
+        acquisition=acquisition,
+        lam=lam,
+        surrogate=surrogate,
+        noisy=False,  # deterministic evaluator (paper §4.3)
+        seed=seed,
+        gp_refit_every=gp_refit_every,
+    )
 
 
 def codesign(
@@ -82,7 +130,16 @@ def codesign(
     batched: bool = True,
     use_cache: bool = True,
     backend: str | None = None,  # inner-engine selector: "numpy" | "jax"
+    layer_batched: bool | None = None,  # None -> backend == "jax"
+    gp_refit_every: int = 1,  # inner-loop GP amortization stride
 ) -> CoDesignResult:
+    # Layer-batched inner search: one bo_maximize_many call per hardware probe
+    # instead of L sequential optimize_software calls.  Defaults on for the
+    # JAX engine (where the per-round work fuses into one device program and
+    # one stacked GP fit) and off for NumPy (which keeps the existing
+    # sequential path; pass layer_batched=True to force the lockstep engine).
+    if layer_batched is None:
+        layer_batched = batched and (backend or default_backend()) == "jax"
     inner_seed = [seed * 7919]
     best = {"edp": np.inf, "hw": None, "maps": None, "per_layer": None}
     # (hw, layer) -> (best mapping | None, edp).  The outer BO routinely
@@ -90,7 +147,8 @@ def codesign(
     # configs, and pool candidates collide across trials); both are frozen
     # dataclasses, so the pair keys a dict and a hit skips the whole inner
     # 250-trial search.  The inner search is stochastic, so caching also makes
-    # repeated probes of one hardware point consistent.
+    # repeated probes of one hardware point consistent.  The cache is shared
+    # by the sequential and layer-batched paths (same keys, same values).
     inner_cache: dict[tuple[HardwareConfig, ConvLayer], tuple[Mapping | None, float]] = {}
 
     def best_mapping(hw: HardwareConfig, layer: ConvLayer) -> tuple[Mapping | None, float]:
@@ -101,6 +159,7 @@ def codesign(
                 n_trials=n_sw_trials, n_warmup=n_sw_warmup, pool_size=sw_pool,
                 acquisition=acquisition, lam=lam, surrogate=surrogate,
                 seed=inner_seed[0], batched=batched, backend=backend,
+                gp_refit_every=gp_refit_every,
             )
             if r.best_point is None:
                 inner_cache[key] = (None, float("inf"))
@@ -108,13 +167,40 @@ def codesign(
                 inner_cache[key] = (r.best_point, evaluate(hw, r.best_point, layer).edp)
         return inner_cache[key]
 
+    def search_layers_batched(hw: HardwareConfig) -> None:
+        """Fill the (hw, layer) cache for every layer this probe still needs,
+        advancing all of those searches in one lockstep bo_maximize_many call
+        (each layer seeded exactly as its sequential optimize_software call
+        would be, so cached entries are interchangeable between paths)."""
+        todo = list(dict.fromkeys(
+            layer for layer in layers
+            if not use_cache or (hw, layer) not in inner_cache))
+        if not todo:
+            return
+        rs = optimize_software_many(
+            hw, todo,
+            n_trials=n_sw_trials, n_warmup=n_sw_warmup, pool_size=sw_pool,
+            acquisition=acquisition, lam=lam, surrogate=surrogate,
+            seed=inner_seed[0], batched=batched, backend=backend,
+            gp_refit_every=gp_refit_every,
+        )
+        for layer, r in zip(todo, rs):
+            if r.best_point is None:
+                inner_cache[(hw, layer)] = (None, float("inf"))
+            else:
+                inner_cache[(hw, layer)] = (
+                    r.best_point, evaluate(hw, r.best_point, layer).edp)
+
     def eval_hw(hw: HardwareConfig):
         inner_seed[0] += 1
+        if layer_batched:
+            search_layers_batched(hw)
         total_edp = 0.0
         maps: dict[str, Mapping] = {}
         per_layer: dict[str, float] = {}
         for layer in layers:
-            m, edp = best_mapping(hw, layer)
+            m, edp = (inner_cache[(hw, layer)] if layer_batched
+                      else best_mapping(hw, layer))
             if m is None:
                 return None, False  # unknown constraint: no feasible mapping found
             total_edp += edp

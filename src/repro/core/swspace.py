@@ -176,3 +176,126 @@ class SoftwareSpace:
         """(B, 14) features as a device-resident jax.Array (JAX backend only)."""
         assert self.backend == "jax", "device features require backend='jax'"
         return self._forward_jax(pool)["features"]
+
+
+@dataclasses.dataclass
+class LayerStackSpace:
+    """L per-layer `SoftwareSpace`s over one hardware config, advanced as one
+    stacked batch -- the layer-batched nested search's packing layer.
+
+    The multi-run BO engine (`repro.core.bo.bo_maximize_many`) hands this a
+    list of per-run candidate pools (one `MappingBatch` per layer) and gets
+    back (L, B)-shaped results:
+
+      * `backend="jax"`: all pools are packed into a single (L*B, 5, 6) batch
+        and evaluated by ONE fused jitted device program per BO round
+        (`batch_jax.forward_device_stacked`, the layer vector per row), with
+        `features_stacked_device` keeping the feature matrix device-resident
+        for the fused GP-acquisition scoring chain;
+      * `backend="numpy"`: per-space vectorized NumPy calls, stacked host-side
+        (no fused program, but the stacked-GP surrogate path still applies).
+
+    Per-row numerics are identical to the per-layer `SoftwareSpace` calls, so
+    a multi-run search reproduces L sequential `bo_maximize` runs.
+    """
+
+    spaces: tuple
+
+    def __post_init__(self) -> None:
+        assert self.spaces, "empty stack"
+        hw = self.spaces[0].hw
+        backend = self.spaces[0].backend
+        assert all(s.hw == hw and s.backend == backend for s in self.spaces)
+
+    @classmethod
+    def maybe(cls, spaces) -> "LayerStackSpace | None":
+        """Build a stack when the runs are stackable: all `SoftwareSpace`s with
+        the batched protocol, one shared hardware config, one backend.
+        Returns None otherwise (the BO engine then falls back to lockstep
+        per-space calls)."""
+        spaces = tuple(spaces)
+        if not spaces or not all(isinstance(s, SoftwareSpace) for s in spaces):
+            return None
+        if not all(s.supports_batch for s in spaces):
+            return None
+        if not all(s.hw == spaces[0].hw and s.backend == spaces[0].backend
+                   for s in spaces):
+            return None
+        return cls(spaces)
+
+    @property
+    def hw(self) -> HardwareConfig:
+        return self.spaces[0].hw
+
+    @property
+    def backend(self) -> str:
+        return self.spaces[0].backend
+
+    @property
+    def supports_device(self) -> bool:
+        return self.backend == "jax"
+
+    @property
+    def n_runs(self) -> int:
+        return len(self.spaces)
+
+    def placeholder_pool(self, n: int) -> tlb.MappingBatch:
+        """All-ones pool of length n: benign rows (finite arithmetic, invalid
+        under the factorization check) used to keep the stacked program's
+        (L, B) shape fixed when some runs sit a round out (no surrogate yet,
+        or stopped early) -- a varying run count would recompile the fused
+        program."""
+        return tlb.MappingBatch(
+            factors=np.ones((n, 5, 6), np.int64),
+            order_lb=np.tile(np.arange(6, dtype=np.int64), (n, 1)),
+            order_gb=np.tile(np.arange(6, dtype=np.int64), (n, 1)),
+            order_dram=np.tile(np.arange(6, dtype=np.int64), (n, 1)),
+        )
+
+    def _forward_stacked_jax(self, pools) -> dict:
+        from repro.timeloop import batch_jax as jtlb
+
+        return jtlb.forward_device_stacked(
+            self.hw, pools, [s.layer for s in self.spaces])
+
+    def forward_stacked(self, pools, runs=None) -> dict[str, np.ndarray]:
+        """Host-side stacked forward over per-run pools (all of equal length):
+        dict of `features` (L, B, 14), `utility` (L, B), `valid` (L, B).
+
+        `runs` restricts the NumPy path to the listed run indices (other rows
+        stay zero) -- rounds where only a subset of runs participates; the JAX
+        path always evaluates the full fixed-(L, B) fused program instead,
+        because a shape that tracked the subset would recompile it."""
+        B = len(pools[0])
+        assert all(len(p) == B for p in pools)
+        if self.backend == "jax":
+            out = self._forward_stacked_jax(pools)
+            return {k: np.asarray(out[k])
+                    for k in ("features", "utility", "valid")}
+        L = self.n_runs
+        feats = np.zeros((L, B, self.spaces[0].feature_dim))
+        utility = np.full((L, B), -np.inf)
+        valid = np.zeros((L, B), dtype=bool)
+        for k in range(L) if runs is None else runs:
+            feats[k] = self.spaces[k].features_batch(pools[k])
+            utility[k], valid[k] = self.spaces[k].evaluate_batch(pools[k])
+        return {"features": feats, "utility": utility, "valid": valid}
+
+    def features_stacked(self, pools, runs=None) -> np.ndarray:
+        """(L, B, 14) host feature tensor only -- the per-trial scoring input.
+        On NumPy this skips the EDP evaluation entirely (the sequential BO
+        trial only featurizes its pool; the winner is evaluated scalar)."""
+        B = len(pools[0])
+        assert all(len(p) == B for p in pools)
+        if self.backend == "jax":
+            return np.asarray(self._forward_stacked_jax(pools)["features"])
+        feats = np.zeros((self.n_runs, B, self.spaces[0].feature_dim))
+        for k in range(self.n_runs) if runs is None else runs:
+            feats[k] = self.spaces[k].features_batch(pools[k])
+        return feats
+
+    def features_stacked_device(self, pools):
+        """(L, B, 14) device-resident features for the fused multi-run GP
+        scoring chain (JAX backend only)."""
+        assert self.supports_device
+        return self._forward_stacked_jax(pools)["features"]

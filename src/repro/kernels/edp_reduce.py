@@ -22,8 +22,14 @@ Operand layout (all leading dim B):
   fo     (B, 2, 6)     loop factors *in loop order* at [gb, dram] level
   relo   (B, 2, 3, 6)  0/1 relevance per [level, tensor(W,I,O), loop position]
   tiles  (B, 2, 3)     [lb, gb] x [W, I, O] tile sizes
-  sp     (B, 5)        [sp_rel_W, sp_rel_I, sp_rel_O, sp_all, used_pes]
-  consts (8,)          [e_mac, e_lb, e_noc, e_gb, e_dram, gb_bw, dram_bw, macs]
+  sp     (B, 6)        [sp_rel_W, sp_rel_I, sp_rel_O, sp_all, used_pes, macs]
+  consts (7,)          [e_mac, e_lb, e_noc, e_gb, e_dram, gb_bw, dram_bw]
+
+`macs` rides with the per-row operands (not the consts) because rows of one
+batch may belong to *different layers*: the layer-stacked nested search packs
+all layers' candidate pools into a single (L*B,)-row program per hardware
+probe, so every layer-dependent quantity must be per-row.  The hardware-only
+energy/bandwidth constants stay shared.
 
 Outputs:
 
@@ -71,9 +77,10 @@ def reduce_edp_terms(fo, relo, tiles, sp, consts):
         include = (~rel) & (pos < anchor[:, None])
         return jnp.prod(jnp.where(include, f, one), axis=1)
 
-    e_mac, e_lb, e_noc, e_gb, e_dram, gb_bw, dram_bw, macs = (
-        consts[i] for i in range(8)
+    e_mac, e_lb, e_noc, e_gb, e_dram, gb_bw, dram_bw = (
+        consts[i] for i in range(7)
     )
+    macs = sp[:, 5]
 
     trips = [
         level_trips(fo[:, li, :], relo[:, li, ti, :])
@@ -127,14 +134,18 @@ def edp_reduce(fo, relo, tiles, sp, consts, *, block: int = 128,
                interpret: bool = True):
     """Pallas dispatch of `reduce_edp_terms`, blocked over the pool dim.
 
-    The pool dim must be divisible by the block size (the caller pads to a
-    power-of-two bucket, so `min(block, B)` always divides).  `interpret=True`
-    runs the kernel body block-by-block in Python -- the CPU CI path;
-    `interpret=False` compiles for the accelerator.
+    The block size is shrunk (by halving) to the largest power of two that
+    divides the pool dim: single-layer callers pad pools to power-of-two
+    buckets (any `min(block, B)` divides), while the layer-stacked program
+    flattens L such buckets into an L*bucket-row batch, which is divisible by
+    the bucket but not necessarily by 128.  `interpret=True` runs the kernel
+    body block-by-block in Python -- the CPU CI path; `interpret=False`
+    compiles for the accelerator.
     """
     n = fo.shape[0]
     blk = min(block, n)
-    assert n % blk == 0, (n, blk)
+    while n % blk:
+        blk //= 2
     grid = (n // blk,)
     return pl.pallas_call(
         _edp_kernel,
@@ -143,8 +154,8 @@ def edp_reduce(fo, relo, tiles, sp, consts, *, block: int = 128,
             pl.BlockSpec((blk, 2, N_DIMS), lambda i: (i, 0, 0)),
             pl.BlockSpec((blk, 2, N_TENSORS, N_DIMS), lambda i: (i, 0, 0, 0)),
             pl.BlockSpec((blk, 2, N_TENSORS), lambda i: (i, 0, 0)),
-            pl.BlockSpec((blk, 5), lambda i: (i, 0)),
-            pl.BlockSpec((8,), lambda i: (0,)),
+            pl.BlockSpec((blk, 6), lambda i: (i, 0)),
+            pl.BlockSpec((7,), lambda i: (0,)),
         ],
         out_specs=[
             pl.BlockSpec((blk, 3), lambda i: (i, 0)),

@@ -15,6 +15,8 @@ from __future__ import annotations
 
 import dataclasses
 
+import numpy as np
+
 from repro.timeloop.workloads import divisors
 
 
@@ -83,6 +85,73 @@ def hw_is_valid(hw: HardwareConfig) -> tuple[bool, str]:
     if hw.df_fw not in (1, 2) or hw.df_fh not in (1, 2):
         return False, "dataflow_option"
     return True, "ok"
+
+
+def sample_hardware_pool(
+    rng, n: int, num_pes: int = 168, base: HardwareConfig | None = None
+) -> list[HardwareConfig]:
+    """Draw n structurally-valid hardware points with array-vectorized
+    parameter sampling (the batched-protocol pool path of `HardwareSpace`):
+    every random draw is a whole-(n,) array op, so building the outer BO
+    loop's 150-candidate pools stops paying per-candidate RNG/python cost.
+
+    Every draw satisfies `hw_is_valid` by construction (mesh products and the
+    LB composition are exact, block/cluster come from divisors of 16), like
+    the scalar `sample_hardware` -- no rejection round is needed."""
+    base = base or HardwareConfig(num_pes=num_pes)
+    if base.lb_budget < 3:
+        # Cannot compose the budget into 3 positive parts; fail loudly like
+        # the scalar sampler (whose no-replacement choice raises) instead of
+        # spinning in the distinct-cut redraw below.
+        raise ValueError(
+            f"lb_budget must be >= 3 to split into I/W/O, got {base.lb_budget}")
+    mesh_divs = np.asarray(divisors(num_pes), dtype=np.int64)
+    mx = rng.choice(mesh_divs, size=n)
+    my = num_pes // mx
+    # LB partition: random composition of the budget into 3 positive parts
+    # (two distinct cut points; equal pairs are redrawn, which matches
+    # choice-without-replacement in distribution).
+    a = rng.integers(1, base.lb_budget, size=n)
+    b = rng.integers(1, base.lb_budget, size=n)
+    clash = a == b
+    while clash.any():
+        b[clash] = rng.integers(1, base.lb_budget, size=int(clash.sum()))
+        clash = a == b
+    lo, hi = np.minimum(a, b), np.maximum(a, b)
+    # GB mesh divisor picks are ragged per row (divisors of mx/my), so draw a
+    # uniform variate per row and index each row's divisor list with it.
+    u_gx, u_gy = rng.random(n), rng.random(n)
+    gx = np.empty(n, dtype=np.int64)
+    gy = np.empty(n, dtype=np.int64)
+    for i in range(n):
+        dx = divisors(int(mx[i]))
+        dy = divisors(int(my[i]))
+        gx[i] = dx[int(u_gx[i] * len(dx))]
+        gy[i] = dy[int(u_gy[i] * len(dy))]
+    blocks = np.asarray([1, 2, 4, 8, 16], dtype=np.int64)
+    gb_block = rng.choice(blocks, size=n)
+    gb_cluster = rng.choice(blocks, size=n)
+    df_fw = rng.choice(np.asarray([1, 2]), size=n)
+    df_fh = rng.choice(np.asarray([1, 2]), size=n)
+    return [
+        dataclasses.replace(
+            base,
+            num_pes=num_pes,
+            pe_mesh_x=int(mx[i]),
+            pe_mesh_y=int(my[i]),
+            lb_input=int(lo[i]),
+            lb_weight=int(hi[i] - lo[i]),
+            lb_output=int(base.lb_budget - hi[i]),
+            gb_instances=int(gx[i] * gy[i]),
+            gb_mesh_x=int(gx[i]),
+            gb_mesh_y=int(gy[i]),
+            gb_block=int(gb_block[i]),
+            gb_cluster=int(gb_cluster[i]),
+            df_fw=int(df_fw[i]),
+            df_fh=int(df_fh[i]),
+        )
+        for i in range(n)
+    ]
 
 
 def sample_hardware(rng, num_pes: int = 168, base: HardwareConfig | None = None) -> HardwareConfig:

@@ -21,7 +21,11 @@ through the Pallas interpreter (`mode="interpret"`, exercised in CI).
 Hardware and layer parameters enter as *arrays* (`hw_vec` / `layer_vec`), not
 static arguments, so one compiled program serves every (hardware, layer) pair
 the nested co-design search probes; pools are padded to power-of-two buckets so
-the jit cache stays small across pool sizes.
+the jit cache stays small across pool sizes.  The layer vector is carried *per
+row* -- the rows of one batch may belong to different layers -- which is what
+lets `forward_device_stacked` pack all L layers' candidate pools of one
+hardware probe into a single (L*B,)-row device program (the layer-batched
+nested search: one fused dispatch per BO round instead of L sequential ones).
 
 Precision: the engine computes in float64 by default (scoped via
 `jax.experimental.enable_x64` -- no global flag is touched), which keeps parity
@@ -95,11 +99,17 @@ def layer_vec(layer: ConvLayer) -> np.ndarray:
     )
 
 
+def layer_vecs(layers) -> np.ndarray:
+    """(L, 8) stacked layer vectors for the layer-batched forward."""
+    return np.stack([layer_vec(layer) for layer in layers])
+
+
 def _prep_one(factors, order_gb, order_dram, hwv, layv):
     """Per-mapping tiles, validity, and gathered reduction operands.
 
-    factors: (5, 6) float, orders: (6,) int -- one row of the packed pool.
-    Returns (ok, fo (2,6), relo (2,3,6), tiles (2,3), sp (5,), sx, sy).
+    factors: (5, 6) float, orders: (6,) int, layv: (8,) -- one row of the
+    packed pool (the layer vector is per-row so stacked multi-layer pools work).
+    Returns (ok, fo (2,6), relo (2,3,6), tiles (2,3), sp (6,), sx, sy).
     All quantities entering the validity comparisons are < 2^24, so they are
     exact in float32 as well as float64 -- masks never depend on the dtype.
     """
@@ -130,18 +140,24 @@ def _prep_one(factors, order_gb, order_dram, hwv, layv):
     sp_rel = jnp.prod(jnp.where(rel > 0.5, sp[None, :], 1.0), axis=1)
     fo = jnp.stack([factors[L_GB][order_gb], factors[L_DRAM][order_dram]])
     relo = jnp.stack([rel[:, order_gb], rel[:, order_dram]])
-    spv = jnp.concatenate([sp_rel, jnp.stack([jnp.prod(sp), sx * sy])])
+    spv = jnp.concatenate(
+        [sp_rel, jnp.stack([jnp.prod(sp), sx * sy, layv[L_MACS]])])
     return ok, fo, relo, jnp.stack([lb, gbt]), spv, sx, sy
 
 
 @functools.partial(jax.jit, static_argnames=("mode",))
 def _forward(factors, order_gb, order_dram, hwv, layv, mode: str):
-    """The fused device program: validity + EDP + features for a whole pool."""
+    """The fused device program: validity + EDP + features for a whole pool.
+
+    `layv` is (B, 8) -- one layer vector per row -- so a single compiled
+    program serves both the single-layer path (rows share one layer) and the
+    layer-stacked path (rows span L layers).
+    """
     ok, fo, relo, tl, spv, sx, sy = jax.vmap(
-        _prep_one, in_axes=(0, 0, 0, None, None)
+        _prep_one, in_axes=(0, 0, 0, None, 0)
     )(factors, order_gb, order_dram, hwv, layv)
 
-    consts = jnp.concatenate([hwv[H_EMAC:], layv[L_MACS:]])
+    consts = hwv[H_EMAC:]
     if mode == "jnp":
         ev, trips = reduce_edp_terms(fo, relo, tl, spv, consts)
     elif mode in ("pallas", "interpret"):
@@ -162,7 +178,7 @@ def _forward(factors, order_gb, order_dram, hwv, layv, mode: str):
             sy / hwv[H_MY],
             *[jnp.log1p(trips[:, j]) for j in range(2 * len(TENSORS))],
             jnp.log1p(used),
-            jnp.log1p(layv[L_MACS] / used),
+            jnp.log1p(layv[:, L_MACS] / used),
         ],
         axis=1,
     )
@@ -227,10 +243,54 @@ def forward_device(
             jnp.asarray(orders[0], jnp.int32),
             jnp.asarray(orders[1], jnp.int32),
             jnp.asarray(hw_vec(hw), dtype),
-            jnp.asarray(layer_vec(layer), dtype),
+            jnp.asarray(np.broadcast_to(layer_vec(layer), (b, 8)), dtype),
             mode=mode,
         )
     return {k: v[:B] for k, v in out.items()}
+
+
+def forward_device_stacked(
+    hw: HardwareConfig,
+    pools,
+    layers,
+    mode: str | None = None,
+    dtype: str | None = None,
+) -> dict[str, jax.Array]:
+    """Layer-batched fused program: L per-layer pools, one device dispatch.
+
+    `pools` is a sequence of L `MappingBatch`es (lengths may differ) and
+    `layers` the matching `ConvLayer`s.  All pools are packed into one
+    (L*bucket,)-row batch -- the layer vector rides per row -- and evaluated by
+    the *same* jitted `_forward` program as the single-layer path, so per-row
+    results are identical to L separate `forward_device` calls.  Returns
+    device-resident arrays with a leading (L, B) shape, B = max pool length
+    (rows past a pool's own length are padding: invalid, -inf utility).
+    """
+    mode, dtype = _resolve(mode, dtype)
+    L = len(pools)
+    assert L == len(layers), (L, len(layers))
+    B = max((len(p) for p in pools), default=0)
+    b = _bucket(B)
+    factors = np.ones((L, b, N_LEVELS, N_DIMS), np.int64)
+    orders = np.tile(np.arange(N_DIMS, dtype=np.int32), (2, L, b, 1))
+    for k, p in enumerate(pools):
+        n = len(p)
+        if n:
+            factors[k, :n] = p.factors
+            orders[0, k, :n] = p.order_gb
+            orders[1, k, :n] = p.order_dram
+    layv = np.repeat(layer_vecs(layers)[:, None, :], b, axis=1)
+    ctx = enable_x64() if dtype == "float64" else contextlib.nullcontext()
+    with ctx:
+        out = _forward(
+            jnp.asarray(factors.reshape(L * b, N_LEVELS, N_DIMS), dtype),
+            jnp.asarray(orders[0].reshape(L * b, N_DIMS), jnp.int32),
+            jnp.asarray(orders[1].reshape(L * b, N_DIMS), jnp.int32),
+            jnp.asarray(hw_vec(hw), dtype),
+            jnp.asarray(layv.reshape(L * b, 8), dtype),
+            mode=mode,
+        )
+    return {k: v.reshape(L, b, *v.shape[1:])[:, :B] for k, v in out.items()}
 
 
 # --- host-facing twins of the NumPy engine -------------------------------------
