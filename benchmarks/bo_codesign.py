@@ -14,11 +14,13 @@ writes to BENCH_codesign.json so the perf trajectory is tracked across PRs.
 
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import numpy as np
 
-from repro.core import codesign
+from repro.core import (CodesignConfig, CodesignEngine, EngineConfig,
+                        HWSearchConfig, SWSearchConfig, optimize_software)
 from repro.core.bo import BOResult
 from repro.core.hwspace import HardwareSpace
 from repro.core.swspace import SoftwareSpace
@@ -29,15 +31,38 @@ from repro.timeloop import evaluate
 from repro.timeloop.mapping import constrained_random_mapping, mapping_is_valid
 
 
+def bench_config(model: str, n_hw: int, n_sw: int, seed: int = 0,
+                 backend: str | None = None, gp_refit_every: int = 1,
+                 batched: bool = True, strategy: str = "auto",
+                 hw_warmup: int | None = None) -> CodesignConfig:
+    """The benchmark suite's reduced-budget `CodesignConfig` (pool 60, warmup
+    n_sw//3 capped at 20 -- the pre-config kwarg bundle, as one object)."""
+    num_pes = 256 if model == "transformer" else 168
+    return CodesignConfig(
+        sw=SWSearchConfig(n_trials=n_sw, n_warmup=min(20, n_sw // 3),
+                          pool_size=60),
+        hw=HWSearchConfig(n_trials=n_hw, pool_size=60, num_pes=num_pes,
+                          **({} if hw_warmup is None
+                             else {"n_warmup": hw_warmup})),
+        engine=EngineConfig(backend=backend, strategy=strategy,
+                            gp_refit_every=gp_refit_every, batched=batched,
+                            use_cache=batched),
+        seed=seed,
+    )
+
+
 def run_model(model: str, n_hw: int = 12, n_sw: int = 60, seeds=(0,),
               baseline_budget: int = 4000, hw_search: str = "bo",
               engine: str = "batched", backend: str | None = None,
-              gp_refit_every: int = 1):
+              gp_refit_every: int = 1, config: CodesignConfig | None = None):
     from repro.core.swspace import default_backend
 
     backend = backend or default_backend()  # None -> $REPRO_BACKEND or numpy
     layers = MODEL_LAYERS[model]
     num_pes = 256 if model == "transformer" else 168
+    if config is not None:
+        backend = config.engine.resolve_backend()  # record what actually ran
+        num_pes = config.hw.num_pes  # baseline at the SAME PE budget as the search
     base = eyeriss_baseline_edp(layers, num_pes=num_pes, budget=baseline_budget)
     base_total = sum(base.values())
     batched = engine == "batched"
@@ -45,24 +70,30 @@ def run_model(model: str, n_hw: int = 12, n_sw: int = 60, seeds=(0,),
     for seed in seeds:
         t0 = time.time()
         if hw_search == "bo":
-            res = codesign(layers, num_pes=num_pes, n_hw_trials=n_hw,
-                           n_sw_trials=n_sw, n_sw_warmup=min(20, n_sw // 3),
-                           sw_pool=60, hw_pool=60, seed=seed,
-                           batched=batched, use_cache=batched,
-                           backend=backend, gp_refit_every=gp_refit_every)
+            cfg = (dataclasses.replace(config, seed=seed)
+                   if config is not None else
+                   bench_config(model, n_hw, n_sw, seed=seed, backend=backend,
+                                gp_refit_every=gp_refit_every,
+                                batched=batched))
+            res = CodesignEngine(cfg).run(layers)
             bests.append(res.best_model_edp)
             curves.append(res.hw_result.history)
         else:  # constrained random hardware search (paper's HW baseline)
-            from repro.core.nested import optimize_software
             from repro.timeloop.model import evaluate as tl_eval
+
+            if config is not None:  # honor the config here too
+                sw_cfg, eng_cfg = config.sw, config.engine
+            else:
+                sw_cfg = SWSearchConfig(n_trials=n_sw,
+                                        n_warmup=min(20, n_sw // 3),
+                                        pool_size=60)
+                eng_cfg = EngineConfig(backend=backend, batched=batched)
 
             def eval_hw(hw):
                 total = 0.0
                 for layer in layers:
-                    r = optimize_software(hw, layer, n_trials=n_sw,
-                                          n_warmup=min(20, n_sw // 3),
-                                          pool_size=60, seed=seed + 1,
-                                          batched=batched)
+                    r = optimize_software(hw, layer, sw_cfg, seed=seed + 1,
+                                          engine=eng_cfg)
                     if r.best_point is None:
                         return None, False
                     total += tl_eval(hw, r.best_point, layer).edp
@@ -167,18 +198,16 @@ def e2e_speedup(model: str = "dqn", n_hw: int = 4, n_sw: int = 40,
     for engine in ("scalar", "batched", "jax"):
         batched = engine != "scalar"
         backend = "jax" if engine == "jax" else "numpy"
+        cfg = bench_config(model, n_hw, n_sw, seed=seed, backend=backend,
+                           batched=batched)
         if engine == "jax":
             # Untimed warmup at the same pool/bucket sizes so one-time jit
             # compiles don't land inside the timed window (mirrors the
             # block_until_ready warmup in engine_speedup).
-            codesign(layers, n_hw_trials=1, n_sw_trials=n_sw,
-                     n_sw_warmup=min(20, n_sw // 3), sw_pool=60, hw_pool=60,
-                     seed=seed, batched=True, use_cache=True, backend="jax")
+            CodesignEngine(dataclasses.replace(
+                cfg, hw=dataclasses.replace(cfg.hw, n_trials=1))).run(layers)
         t0 = time.perf_counter()
-        codesign(layers, n_hw_trials=n_hw, n_sw_trials=n_sw,
-                 n_sw_warmup=min(20, n_sw // 3), sw_pool=60, hw_pool=60,
-                 seed=seed, batched=batched, use_cache=batched,
-                 backend=backend)
+        CodesignEngine(cfg).run(layers)
         out[f"{engine}_s"] = round(time.perf_counter() - t0, 3)
     out["speedup"] = round(out["scalar_s"] / out["batched_s"], 2)
     out["jax_speedup"] = round(out["scalar_s"] / out["jax_s"], 2)
@@ -198,34 +227,82 @@ def layer_batch_speedup(model: str = "resnet", n_hw: int = 4, n_sw: int = 60,
     which drops transient machine noise (shared CI hardware) rather than
     averaging it into the ratio.  JIT caches are warmed untimed."""
     layers = MODEL_LAYERS[model]
-    kw = dict(n_sw_trials=n_sw, n_sw_warmup=min(20, n_sw // 3),
-              sw_pool=60, hw_pool=60, seed=seed, batched=True, use_cache=True)
     out: dict = {"model": model, "n_hw": n_hw, "n_sw": n_sw, "reps": reps}
     for backend in ("numpy", "jax"):
-        for lb in (False, True):
-            codesign(layers, n_hw_trials=1, layer_batched=lb, backend=backend,
-                     **kw)  # warm jit caches / one-time imports
-        times: dict[bool, list[float]] = {False: [], True: []}
+        cfgs = {
+            strat: bench_config(model, n_hw, n_sw, seed=seed, backend=backend,
+                                strategy=strat)
+            for strat in ("sequential", "layer_batched")
+        }
+        for cfg in cfgs.values():  # warm jit caches / one-time imports
+            CodesignEngine(dataclasses.replace(
+                cfg, hw=dataclasses.replace(cfg.hw, n_trials=1))).run(layers)
+        times: dict[str, list[float]] = {s: [] for s in cfgs}
         for _ in range(reps):
-            for lb in (False, True):
+            for strat, cfg in cfgs.items():
                 t0 = time.perf_counter()
-                codesign(layers, n_hw_trials=n_hw, layer_batched=lb,
-                         backend=backend, **kw)
-                times[lb].append(time.perf_counter() - t0)
-        seq_s, batch_s = min(times[False]), min(times[True])
+                CodesignEngine(cfg).run(layers)
+                times[strat].append(time.perf_counter() - t0)
+        seq_s, batch_s = min(times["sequential"]), min(times["layer_batched"])
         out[f"{backend}_sequential_s"] = round(seq_s, 3)
         out[f"{backend}_batched_s"] = round(batch_s, 3)
         out[f"{backend}_speedup"] = round(seq_s / batch_s, 2)
     return out
 
 
+def probe_fanout_speedup(model: str = "resnet", n_hw: int = 4, n_sw: int = 60,
+                         seed: int = 0, reps: int = 2) -> dict:
+    """Probe-fanout nested search vs the layer-batched path, per backend --
+    the ROADMAP "parallelize across hardware probes" capability the config
+    API unlocked.
+
+    The outer budget is all warmup (`hw.n_warmup = n_hw`), so every probe is
+    an independent work item: `strategy="probe_fanout"` runs all H probes'
+    H*L inner searches as ONE stacked `bo_maximize_many` (on jax each BO
+    round is a single (H*L*B,)-row fused device program + one stacked GP
+    fit), while `layer_batched` evaluates the probes one at a time (H
+    dispatch-chains of L-run programs).  Both sides run the same searches with
+    the same seeds -- parity is pinned in tests/test_config_api.py -- so the
+    ratio isolates the fan-out's dispatch/fit amortization.  Timing protocol
+    matches `layer_batch_speedup`: interleaved reps, per-side minimum, jit
+    caches warmed untimed at full fan-out width."""
+    layers = MODEL_LAYERS[model]
+    out: dict = {"model": model, "n_hw": n_hw, "n_sw": n_sw, "reps": reps}
+    for backend in ("numpy", "jax"):
+        cfgs = {
+            strat: bench_config(model, n_hw, n_sw, seed=seed, backend=backend,
+                                strategy=strat, hw_warmup=n_hw)
+            for strat in ("layer_batched", "probe_fanout")
+        }
+        for cfg in cfgs.values():
+            # Full untimed warm run per side: the fan-out's (H*L*bucket,)-row
+            # program and its stacked-GP bucket progression only exist at the
+            # real probe count and trial budget, so any reduced warmup would
+            # leave compiles inside the timed window.
+            CodesignEngine(cfg).run(layers)
+        times: dict[str, list[float]] = {s: [] for s in cfgs}
+        for _ in range(reps):
+            for strat, cfg in cfgs.items():
+                t0 = time.perf_counter()
+                CodesignEngine(cfg).run(layers)
+                times[strat].append(time.perf_counter() - t0)
+        base_s, fan_s = min(times["layer_batched"]), min(times["probe_fanout"])
+        out[f"{backend}_layer_batched_s"] = round(base_s, 3)
+        out[f"{backend}_fanout_s"] = round(fan_s, 3)
+        out[f"{backend}_speedup"] = round(base_s / fan_s, 2)
+    return out
+
+
 def run(n_hw: int = 12, n_sw: int = 60, seeds=(0,), quiet: bool = False,
         collect: dict | None = None, backend: str | None = None,
-        gp_refit_every: int = 1):
+        gp_refit_every: int = 1, config: CodesignConfig | None = None):
+    """Fig. 4/5a over the four seed models.  `config` (e.g. loaded from
+    `benchmarks/run.py --config path.json`) overrides the per-model budget
+    construction entirely -- only the seed is replaced per run."""
     out = {}
     for model in ("resnet", "dqn", "mlp", "transformer"):
         r = run_model(model, n_hw=n_hw, n_sw=n_sw, seeds=seeds, backend=backend,
-                      gp_refit_every=gp_refit_every)
+                      gp_refit_every=gp_refit_every, config=config)
         out[model] = r
         if not quiet:
             print(f"fig5a,{model},eyeriss={r['eyeriss_edp']:.3e},"
@@ -253,7 +330,8 @@ def _finite(x: float):
     return float(x) if np.isfinite(x) else None
 
 
-def print_speedups(eng: dict, e2e: dict, lb: dict | None = None) -> None:
+def print_speedups(eng: dict, e2e: dict, lb: dict | None = None,
+                   pf: dict | None = None) -> None:
     """CSV lines for the engine/e2e speedup records (shared with run.py)."""
     for name, r in eng["layers"].items():
         print(f"engine,{name},scalar={r['scalar_s']}s,"
@@ -272,6 +350,14 @@ def print_speedups(eng: dict, e2e: dict, lb: dict | None = None) -> None:
               f"jax_seq={lb['jax_sequential_s']}s,"
               f"jax_batched={lb['jax_batched_s']}s,"
               f"jax_speedup={lb['jax_speedup']}x")
+    if pf is not None:
+        print(f"probe_fanout,{pf['model']},"
+              f"numpy_base={pf['numpy_layer_batched_s']}s,"
+              f"numpy_fanout={pf['numpy_fanout_s']}s,"
+              f"numpy_speedup={pf['numpy_speedup']}x,"
+              f"jax_base={pf['jax_layer_batched_s']}s,"
+              f"jax_fanout={pf['jax_fanout_s']}s,"
+              f"jax_speedup={pf['jax_speedup']}x")
 
 
 if __name__ == "__main__":
@@ -289,7 +375,8 @@ if __name__ == "__main__":
                     help="inner-loop surrogate refit stride (GP amortization)")
     args = ap.parse_args()
     if args.speedup:
-        print_speedups(engine_speedup(), e2e_speedup(), layer_batch_speedup())
+        print_speedups(engine_speedup(), e2e_speedup(), layer_batch_speedup(),
+                       probe_fanout_speedup())
     elif args.paper:
         run(n_hw=50, n_sw=250, seeds=(0, 1, 2), backend=args.backend,
             gp_refit_every=args.gp_refit_every)

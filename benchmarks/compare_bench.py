@@ -20,13 +20,16 @@ engine regression still shows up as a dropped ratio.
     jax_speedup   JAX batch engine vs scalar     (annotating only: jit/dispatch
                                                   timings are noisier)
 
-The multi-layer path is gated through `layer_batch_e2e` -- the layer-batched
-nested search vs the sequential-layer path, per backend (both sides of each
-ratio run the same engine on the same machine, so the ratio is as robust as
-the hot-path ones):
+The multi-run nested-search paths are gated through `layer_batch_e2e` (the
+layer-batched search vs the sequential-layer path) and `probe_fanout_e2e`
+(the outer warmup's H-probe fan-out vs per-probe layer-batched), per backend
+-- both sides of each ratio run the same engine on the same machine, so the
+ratios are as robust as the hot-path ones:
 
-    layer_batch_e2e.numpy_speedup   (gating)
-    layer_batch_e2e.jax_speedup     (annotating only, like jax_speedup)
+    layer_batch_e2e.numpy_speedup    (gating)
+    layer_batch_e2e.jax_speedup      (annotating only, like jax_speedup)
+    probe_fanout_e2e.numpy_speedup   (gating)
+    probe_fanout_e2e.jax_speedup     (annotating only, like jax_speedup)
 
 A missing/invalid previous record is not an error -- first runs and artifact
 expiry just skip the gate with a notice.  Records written before a metric
@@ -62,10 +65,11 @@ def _speedups(record: dict, key: str) -> dict[str, float]:
     }
 
 
-def _layer_batch_speedups(record: dict, key: str) -> dict[str, float]:
-    """The multi-layer record holds one ratio per backend (keyed by the
-    workload model so the geomean machinery applies unchanged)."""
-    lb = record.get("layer_batch_e2e") or {}
+def _section_speedups(record: dict, section: str, key: str) -> dict[str, float]:
+    """A nested-search e2e record (`layer_batch_e2e` / `probe_fanout_e2e`)
+    holds one ratio per backend (keyed by the workload model so the geomean
+    machinery applies unchanged)."""
+    lb = record.get(section) or {}
     v = lb.get(key)
     if not isinstance(v, (int, float)) or v <= 0:
         return {}
@@ -114,11 +118,15 @@ def main() -> int:
         ("jax_speedup", _speedups, False),
         ("layer_batch.numpy_speedup", None, True),
         ("layer_batch.jax_speedup", None, False),
+        ("probe_fanout.numpy_speedup", None, True),
+        ("probe_fanout.jax_speedup", None, False),
     ):
         if extract is None:
-            metric = key.split(".", 1)[1]
-            olds = _layer_batch_speedups(old, metric)
-            news = _layer_batch_speedups(new, metric)
+            section, metric = key.split(".", 1)
+            section = {"layer_batch": "layer_batch_e2e",
+                       "probe_fanout": "probe_fanout_e2e"}[section]
+            olds = _section_speedups(old, section, metric)
+            news = _section_speedups(new, section, metric)
         else:
             olds, news = extract(old, key), extract(new, key)
         ratio, details = _geomean_ratio(olds, news)

@@ -30,11 +30,23 @@ def main() -> None:
     ap.add_argument("--gp-refit-every", type=int, default=1,
                     help="inner-loop surrogate refit stride (GP amortization "
                          "knob, threaded to codesign)")
+    ap.add_argument("--config", default=None, metavar="PATH",
+                    help="JSON CodesignConfig (CodesignConfig.from_dict) for "
+                         "the co-design section; overrides the budget/backend "
+                         "flags for that section")
     args, _ = ap.parse_known_args()
 
+    from repro.core import CodesignConfig
     from repro.core.swspace import default_backend
 
+    config = None
+    if args.config is not None:
+        with open(args.config) as f:
+            config = CodesignConfig.from_dict(json.load(f))
+
     backend = args.backend or default_backend()
+    if config is not None:
+        backend = config.engine.resolve_backend()
 
     from benchmarks import bo_ablation, bo_codesign, bo_software, roofline
 
@@ -53,17 +65,21 @@ def main() -> None:
     print(f"# Fig. 4 / 5a -- HW/SW co-design vs Eyeriss (backend={backend})")
     if args.paper:
         bo_codesign.run(n_hw=50, n_sw=250, seeds=(0, 1, 2), collect=collect,
-                        backend=backend, gp_refit_every=args.gp_refit_every)
+                        backend=backend, gp_refit_every=args.gp_refit_every,
+                        config=config)
     else:
         bo_codesign.run(n_hw=12, n_sw=60, seeds=(0,), collect=collect,
-                        backend=backend, gp_refit_every=args.gp_refit_every)
+                        backend=backend, gp_refit_every=args.gp_refit_every,
+                        config=config)
 
     print("# engines -- hot-path + end-to-end speedups (numpy + jax) vs scalar")
     eng = bo_codesign.engine_speedup()
     e2e = bo_codesign.e2e_speedup()
     print("# layer-batched nested search vs sequential layers (per backend)")
     lbe = bo_codesign.layer_batch_speedup()
-    bo_codesign.print_speedups(eng, e2e, lbe)
+    print("# probe-fanout warmup vs per-probe layer-batched (per backend)")
+    pfe = bo_codesign.probe_fanout_speedup()
+    bo_codesign.print_speedups(eng, e2e, lbe, pfe)
 
     print("# Fig. 5b/5c -- surrogate/acquisition + lambda ablations")
     bo_ablation.run(n_trials=250 if args.paper else 80,
@@ -79,6 +95,7 @@ def main() -> None:
         collect["engine_speedup"] = eng
         collect["e2e_speedup"] = e2e
         collect["layer_batch_e2e"] = lbe
+        collect["probe_fanout_e2e"] = pfe
         collect["backend"] = backend
         collect["paper_budgets"] = bool(args.paper)
         collect["total_s"] = round(total, 1)

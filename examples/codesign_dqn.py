@@ -1,18 +1,48 @@
 """Full nested HW/SW co-design on the DQN workload (the paper's best case:
-40.2% EDP improvement over Eyeriss).
+40.2% EDP improvement over Eyeriss), on the typed config API.
 
-    PYTHONPATH=src python examples/codesign_dqn.py [--paper]
+    PYTHONPATH=src python examples/codesign_dqn.py [--paper | --tiny]
+        [--strategy auto|sequential|layer_batched|probe_fanout]
+        [--backend numpy|jax] [--save-config cfg.json]
+
+`--save-config` writes the exact `CodesignConfig` that ran as JSON; feed it
+back through `python -m benchmarks.run --config cfg.json` (or
+`CodesignConfig.from_json`) to reproduce the search.
 """
 
 import argparse
 
-from repro.core import codesign
+from repro.core import (BACKENDS, STRATEGIES, CodesignConfig, CodesignEngine,
+                        EngineConfig, HWSearchConfig, SWSearchConfig)
 from repro.timeloop import MODEL_LAYERS, eyeriss_baseline_edp
+
+
+def build_config(args) -> CodesignConfig:
+    if args.paper:  # 50 HW x 250 SW trials (paper §4.1)
+        sw = SWSearchConfig()                      # 250 / 30 / 150
+        hw = HWSearchConfig()                      # 50 / 5 / 150
+    elif args.tiny:  # CI smoke budgets: seconds, exercises every layer
+        sw = SWSearchConfig(n_trials=10, n_warmup=5, pool_size=16)
+        hw = HWSearchConfig(n_trials=2, n_warmup=2, pool_size=16)
+    else:
+        sw = SWSearchConfig(n_trials=60, n_warmup=20, pool_size=60)
+        hw = HWSearchConfig(n_trials=12, pool_size=60)
+    return CodesignConfig(
+        sw=sw, hw=hw,
+        engine=EngineConfig(backend=args.backend, strategy=args.strategy),
+        seed=0, verbose=not args.tiny,
+    )
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--paper", action="store_true", help="50 HW x 250 SW trials")
+    ap.add_argument("--tiny", action="store_true",
+                    help="smoke-test budgets (CI)")
+    ap.add_argument("--backend", default=None, choices=BACKENDS)
+    ap.add_argument("--strategy", default="auto", choices=STRATEGIES)
+    ap.add_argument("--save-config", default=None, metavar="PATH",
+                    help="write the CodesignConfig that ran as JSON")
     args = ap.parse_args()
 
     layers = MODEL_LAYERS["dqn"]
@@ -22,12 +52,18 @@ def main():
     for k, v in base.items():
         print(f"  {k}: {v:.3e}")
 
-    kwargs = (dict(n_hw_trials=50, n_sw_trials=250, n_sw_warmup=30,
-                   sw_pool=150, hw_pool=150)
-              if args.paper else
-              dict(n_hw_trials=12, n_sw_trials=60, n_sw_warmup=20,
-                   sw_pool=60, hw_pool=60))
-    res = codesign(layers, num_pes=168, seed=0, verbose=True, **kwargs)
+    config = build_config(args)
+    # The config is one serializable object: JSON round-trip is exact.
+    assert CodesignConfig.from_json(config.to_json()) == config
+    if args.save_config:
+        with open(args.save_config, "w") as f:
+            f.write(config.to_json())
+        print(f"wrote {args.save_config}")
+
+    engine = CodesignEngine(config)
+    print(f"search: {config.hw.n_trials} HW x {config.sw.n_trials} SW trials, "
+          f"backend={engine.backend}, strategy={engine.strategy_name}")
+    res = engine.run(layers)
 
     print(f"\nco-designed: model EDP {res.best_model_edp:.3e} "
           f"({(1 - res.best_model_edp / base_total) * 100:.1f}% better than Eyeriss)")

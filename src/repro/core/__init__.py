@@ -1,17 +1,41 @@
 """The paper's contribution: nested constrained Bayesian optimization for
-hardware/software co-design, plus the beyond-paper TPU sharding autotuner."""
+hardware/software co-design, plus the beyond-paper TPU sharding autotuner.
 
+The search surface is the typed config API (`repro.core.config`):
+`CodesignConfig` (sw/hw/engine sections, JSON round-trip) run by a
+`CodesignEngine`; `codesign(**legacy_kwargs)` remains as a deprecation shim.
+"""
+
+from repro.core.config import (ACQUISITIONS, BACKENDS, PALLAS_MODES,
+                               STRATEGIES, SURROGATES, CodesignConfig,
+                               EngineConfig, HWSearchConfig, SearchConfig,
+                               SWSearchConfig, config_from_legacy_kwargs)
 from repro.core.gp import GP, GPClassifier, GPClassifierStack, GPStack
 from repro.core.acquisition import expected_improvement, lcb, make_acquisition
 from repro.core.bo import BOResult, bo_maximize, bo_maximize_many
 from repro.core.swspace import LayerStackSpace, SoftwareSpace
 from repro.core.hwspace import HardwareSpace
-from repro.core.nested import (CoDesignResult, codesign, optimize_software,
+from repro.core.nested import (PROBE_STRATEGIES, CoDesignResult,
+                               CodesignEngine, LayerBatchedProbes,
+                               ProbeFanoutProbes, ProbeStrategy,
+                               SequentialProbes, codesign, optimize_software,
+                               optimize_software_fanout,
                                optimize_software_many)
 from repro.core.baselines import random_search, relax_round_bo, tvm_style_search
 from repro.core.trees import GradientBoostedTrees, RandomForestSurrogate
 
 __all__ = [
+    "ACQUISITIONS",
+    "BACKENDS",
+    "PALLAS_MODES",
+    "STRATEGIES",
+    "SURROGATES",
+    "CodesignConfig",
+    "EngineConfig",
+    "HWSearchConfig",
+    "SearchConfig",
+    "SWSearchConfig",
+    "config_from_legacy_kwargs",
     "GP",
     "GPClassifier",
     "GPClassifierStack",
@@ -25,9 +49,16 @@ __all__ = [
     "LayerStackSpace",
     "SoftwareSpace",
     "HardwareSpace",
+    "PROBE_STRATEGIES",
     "CoDesignResult",
+    "CodesignEngine",
+    "LayerBatchedProbes",
+    "ProbeFanoutProbes",
+    "ProbeStrategy",
+    "SequentialProbes",
     "codesign",
     "optimize_software",
+    "optimize_software_fanout",
     "optimize_software_many",
     "random_search",
     "relax_round_bo",

@@ -45,11 +45,12 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
-from typing import Any, Callable
+from typing import Any, Callable, Sequence
 
 import numpy as np
 
 from repro.core.acquisition import make_acquisition, make_acquisition_device
+from repro.core.config import BACKENDS, SearchConfig, SWSearchConfig
 from repro.core.gp import GP, GPClassifier, GPClassifierStack, GPStack
 from repro.core.trees import RandomForestSurrogate
 
@@ -66,8 +67,6 @@ def _backend_override(spaces, backend: str):
     callers' spaces are restored on the way out.  Unknown values and spaces
     without backend selection are reported, never ignored.  Shared by
     `bo_maximize` and `bo_maximize_many`."""
-    from repro.core.swspace import BACKENDS
-
     if backend not in BACKENDS:
         raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
     for s in spaces:
@@ -95,28 +94,42 @@ class BOResult:
     n_infeasible: int = 0
 
 
+def _resolve_search_config(config, overrides) -> SearchConfig:
+    """Normalize (config object, field overrides) to one validated
+    `SearchConfig`.  Overrides are the config's own field names
+    (n_trials/n_warmup/pool_size/acquisition/lam/surrogate) -- the pre-config
+    kwarg surface -- applied through `dataclasses.replace`, so the replaced
+    config re-validates and an unknown name raises TypeError."""
+    if config is not None and not isinstance(config, SearchConfig):
+        # Loud break for pre-config positional callers (n_trials used to be
+        # the second positional argument).
+        raise TypeError(
+            f"config must be a SearchConfig (e.g. SWSearchConfig), got "
+            f"{config!r}; pass search fields by keyword (n_trials=...)")
+    cfg = config if config is not None else SWSearchConfig()
+    return dataclasses.replace(cfg, **overrides) if overrides else cfg
+
+
 def bo_maximize(
     space,
-    n_trials: int = 250,
-    n_warmup: int = 30,
-    pool_size: int = 150,
-    acquisition: str = "lcb",
-    lam: float = 1.0,
-    surrogate: str = "gp_linear",
+    config: SearchConfig | None = None,
+    *,
     noisy: bool = False,
     seed: int = 0,
     gp_refit_every: int = 1,
     callback: Callable[[int, BOResult], None] | None = None,
     backend: str | None = None,
+    **overrides,
 ) -> BOResult:
+    cfg = _resolve_search_config(config, overrides)
     if backend is not None:
         with _backend_override([space], backend):
             return bo_maximize(
-                space, n_trials=n_trials, n_warmup=n_warmup,
-                pool_size=pool_size, acquisition=acquisition, lam=lam,
-                surrogate=surrogate, noisy=noisy, seed=seed,
+                space, cfg, noisy=noisy, seed=seed,
                 gp_refit_every=gp_refit_every, callback=callback,
             )
+    n_trials, n_warmup, pool_size = cfg.n_trials, cfg.n_warmup, cfg.pool_size
+    acquisition, lam, surrogate = cfg.acquisition, cfg.lam, cfg.surrogate
     rng = np.random.default_rng(seed)
     acq = make_acquisition(acquisition, lam)
     acq_dev = None
@@ -267,22 +280,22 @@ class _Cohort:
 
 def bo_maximize_many(
     spaces,
-    n_trials: int = 250,
-    n_warmup: int = 30,
-    pool_size: int = 150,
-    acquisition: str = "lcb",
-    lam: float = 1.0,
-    surrogate: str = "gp_linear",
+    config: SearchConfig | None = None,
+    *,
     noisy: bool = False,
-    seed: int = 0,
+    seed: int | Sequence[int] = 0,
     gp_refit_every: int = 1,
     callback: Callable[[int, list[BOResult]], None] | None = None,
     backend: str | None = None,
+    **overrides,
 ) -> list[BOResult]:
     """Advance L independent BO runs in lockstep; returns one `BOResult` per
     space, matching ``[bo_maximize(s, ...) for s in spaces]`` run-for-run
-    (each run draws from its own RNG stream seeded with `seed`, exactly as the
-    sequential calls would).
+    (each run draws from its own RNG stream, exactly as the sequential calls
+    would).  `seed` is one shared seed (the layer-batched nested search: all
+    per-layer runs of one probe are seeded alike) or a sequence of L per-run
+    seeds (the probe-fanout search: runs belonging to different hardware
+    probes keep their probes' distinct seeds).
 
     Per round, the L-fold repeated work becomes one batched program each:
     candidate pools are featurized by a single fused device dispatch when the
@@ -300,18 +313,23 @@ def bo_maximize_many(
     `callback`, when given, receives `(trial_index, results_list)` once per
     lockstep round (not per run; on the sequential fallback it fires per
     advancing run, with empty placeholders for runs not yet started)."""
+    cfg = _resolve_search_config(config, overrides)
     spaces = list(spaces)
     L = len(spaces)
     if L == 0:
         return []
+    seeds = [seed] * L if isinstance(seed, (int, np.integer)) else list(seed)
+    if len(seeds) != L:
+        raise ValueError(f"seed sequence has {len(seeds)} entries "
+                         f"for {L} spaces")
     if backend is not None:
         with _backend_override(spaces, backend):
             return bo_maximize_many(
-                spaces, n_trials=n_trials, n_warmup=n_warmup,
-                pool_size=pool_size, acquisition=acquisition, lam=lam,
-                surrogate=surrogate, noisy=noisy, seed=seed,
+                spaces, cfg, noisy=noisy, seed=seeds,
                 gp_refit_every=gp_refit_every, callback=callback,
             )
+    n_trials, n_warmup, pool_size = cfg.n_trials, cfg.n_warmup, cfg.pool_size
+    acquisition, lam, surrogate = cfg.acquisition, cfg.lam, cfg.surrogate
 
     stackable = (
         surrogate in ("gp_linear", "gp_se")
@@ -336,9 +354,7 @@ def bo_maximize_many(
                 cb = lambda t, r, _rest=rest: callback(t, out + [r] + _rest)
             try:
                 out.append(bo_maximize(
-                    s, n_trials=n_trials, n_warmup=n_warmup,
-                    pool_size=pool_size, acquisition=acquisition, lam=lam,
-                    surrogate=surrogate, noisy=noisy, seed=seed,
+                    s, cfg, noisy=noisy, seed=seeds[i],
                     gp_refit_every=gp_refit_every, callback=cb))
             except InfeasibleSpace:
                 out.append(BOResult(None, -np.inf, [], [], []))
@@ -354,7 +370,7 @@ def bo_maximize_many(
     )
     kind = {"gp_linear": "linear", "gp_se": "se"}[surrogate]
 
-    rngs = [np.random.default_rng(seed) for _ in spaces]
+    rngs = [np.random.default_rng(s) for s in seeds]
     acq = make_acquisition(acquisition, lam)
     acq_dev = make_acquisition_device(acquisition, lam) if use_device else None
 

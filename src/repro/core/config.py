@@ -1,0 +1,242 @@
+"""Typed, serializable search configuration for the co-design stack.
+
+The nested search used to thread ~19 positional kwargs through
+`codesign` -> `optimize_software(_many)` -> `bo_maximize(_many)` ->
+`SoftwareSpace`; every new capability meant another knob at every layer.  This
+module replaces that kwarg pipeline with a small set of frozen dataclasses:
+
+  `SearchConfig`      one BO loop's budget + acquisition + surrogate
+    `SWSearchConfig`    inner (software-mapping) defaults: 250 trials / 30 warmup
+    `HWSearchConfig`    outer (hardware) defaults: 50 trials / 5 warmup + num_pes
+  `EngineConfig`      evaluation machinery: backend, probe strategy,
+                      GP-refit stride, batched protocol, cache, Pallas mode
+  `CodesignConfig`    the composition (+ seed, verbose) -- the single object a
+                      `CodesignEngine` runs; JSON round-trips via
+                      `to_dict`/`from_dict`/`to_json`/`from_json`
+
+Every enumerated string (backend / surrogate / acquisition / probe strategy /
+Pallas mode) is validated HERE, at construction, through one shared
+`validate_choice` site -- a bad value raises `ValueError` before any search
+starts instead of threading silently to a deep call site.
+
+`config_from_legacy_kwargs` maps the pre-config `codesign(**kwargs)` surface
+onto a `CodesignConfig` (the deprecation shim in `repro.core.nested` uses it);
+the old-kwarg -> config-field table lives in the README's "Search API" section.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any
+
+BACKENDS = ("numpy", "jax")
+SURROGATES = ("gp_linear", "gp_se", "rf")
+ACQUISITIONS = ("lcb", "ei")
+STRATEGIES = ("auto", "sequential", "layer_batched", "probe_fanout")
+PALLAS_MODES = ("jnp", "pallas", "interpret")
+
+
+def validate_choice(field: str, value, choices, optional: bool = False) -> None:
+    """The one ValueError site for enumerated config strings."""
+    if optional and value is None:
+        return
+    if value not in choices:
+        allowed = " | ".join(repr(c) for c in choices)
+        extra = " | None" if optional else ""
+        raise ValueError(f"{field} must be one of {allowed}{extra}, "
+                         f"got {value!r}")
+
+
+def _validate_positive_int(field: str, value, minimum: int = 1) -> None:
+    if not isinstance(value, int) or isinstance(value, bool) or value < minimum:
+        raise ValueError(f"{field} must be an int >= {minimum}, got {value!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchConfig:
+    """One constrained-BO loop: budget, acquisition, surrogate (paper §3)."""
+
+    n_trials: int = 250
+    n_warmup: int = 30
+    pool_size: int = 150
+    acquisition: str = "lcb"
+    lam: float = 1.0
+    surrogate: str = "gp_linear"
+
+    def __post_init__(self) -> None:
+        validate_choice("acquisition", self.acquisition, ACQUISITIONS)
+        validate_choice("surrogate", self.surrogate, SURROGATES)
+        _validate_positive_int("n_trials", self.n_trials)
+        _validate_positive_int("n_warmup", self.n_warmup, minimum=0)
+        _validate_positive_int("pool_size", self.pool_size)
+
+
+@dataclasses.dataclass(frozen=True)
+class SWSearchConfig(SearchConfig):
+    """Inner per-layer software-mapping search (250 trials in the paper)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class HWSearchConfig(SearchConfig):
+    """Outer hardware search (50 trials / 5 warmup in the paper) plus the
+    PE budget that parameterizes the hardware space itself."""
+
+    n_trials: int = 50
+    n_warmup: int = 5
+    num_pes: int = 168
+
+    def __post_init__(self) -> None:
+        super().__post_init__()
+        _validate_positive_int("num_pes", self.num_pes)
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Evaluation machinery, orthogonal to either loop's search budget.
+
+    backend         "numpy" | "jax" | None (None -> $REPRO_BACKEND or "numpy")
+    strategy        probe-evaluation strategy for the nested driver:
+                      "sequential"    L per-layer searches per hardware probe
+                      "layer_batched" one lockstep `bo_maximize_many` per probe
+                      "probe_fanout"  layer_batched + the outer warmup's H
+                                      independent probes fanned out as ONE
+                                      H*L-run stacked `bo_maximize_many`
+                      "auto"          layer_batched on jax, sequential on numpy
+    gp_refit_every  inner-loop surrogate refit stride (amortization)
+    batched         expose the batched evaluation protocol to the BO loop
+    use_cache       share the (hw, layer) -> best-mapping cache across probes
+    pallas_mode     inner-kernel dispatch: "jnp" | "pallas" | "interpret" |
+                    None (None -> jnp off-TPU, pallas on TPU)
+    """
+
+    backend: str | None = None
+    strategy: str = "auto"
+    gp_refit_every: int = 1
+    batched: bool = True
+    use_cache: bool = True
+    pallas_mode: str | None = None
+
+    def __post_init__(self) -> None:
+        validate_choice("backend", self.backend, BACKENDS, optional=True)
+        validate_choice("strategy", self.strategy, STRATEGIES)
+        validate_choice("pallas_mode", self.pallas_mode, PALLAS_MODES,
+                        optional=True)
+        _validate_positive_int("gp_refit_every", self.gp_refit_every)
+        if self.strategy == "probe_fanout" and not self.use_cache:
+            raise ValueError(
+                "strategy='probe_fanout' requires use_cache=True: the fan-out "
+                "prefills the (hw, layer) cache that probe evaluation reads")
+
+    def resolve_backend(self) -> str:
+        from repro.core.swspace import default_backend
+
+        return self.backend or default_backend()
+
+    def resolve_strategy(self) -> str:
+        """Concrete strategy name ('auto' resolved against the backend)."""
+        if self.strategy != "auto":
+            return self.strategy
+        if self.batched and self.resolve_backend() == "jax":
+            return "layer_batched"
+        return "sequential"
+
+
+@dataclasses.dataclass(frozen=True)
+class CodesignConfig:
+    """The full nested-search configuration a `CodesignEngine` runs."""
+
+    sw: SWSearchConfig = dataclasses.field(default_factory=SWSearchConfig)
+    hw: HWSearchConfig = dataclasses.field(default_factory=HWSearchConfig)
+    engine: EngineConfig = dataclasses.field(default_factory=EngineConfig)
+    seed: int = 0
+    verbose: bool = False
+
+    def __post_init__(self) -> None:
+        for field, cls in (("sw", SWSearchConfig), ("hw", HWSearchConfig),
+                           ("engine", EngineConfig)):
+            if not isinstance(getattr(self, field), cls):
+                raise ValueError(
+                    f"{field} must be a {cls.__name__}, "
+                    f"got {getattr(self, field)!r}")
+
+    # --- serialization ----------------------------------------------------------
+
+    def to_dict(self) -> dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict[str, Any]) -> "CodesignConfig":
+        """Inverse of `to_dict`; sections and fields may be omitted (defaults
+        apply), unknown keys raise ValueError."""
+        d = dict(d)
+        try:
+            sw = SWSearchConfig(**d.pop("sw", None) or {})
+            hw = HWSearchConfig(**d.pop("hw", None) or {})
+            engine = EngineConfig(**d.pop("engine", None) or {})
+            return cls(sw=sw, hw=hw, engine=engine, **d)
+        except TypeError as e:  # unknown field name in some section
+            raise ValueError(f"invalid CodesignConfig dict: {e}") from None
+
+    def to_json(self, **json_kw) -> str:
+        json_kw.setdefault("indent", 2)
+        json_kw.setdefault("sort_keys", True)
+        return json.dumps(self.to_dict(), **json_kw)
+
+    @classmethod
+    def from_json(cls, s: str) -> "CodesignConfig":
+        return cls.from_dict(json.loads(s))
+
+
+# --- legacy kwarg surface --------------------------------------------------------
+
+# old codesign kwarg -> (section, config field); None section = CodesignConfig
+# top level.  This is the migration table (also rendered in the README).
+LEGACY_KWARG_MAP: dict[str, tuple[str | None, str]] = {
+    "num_pes": ("hw", "num_pes"),
+    "n_hw_trials": ("hw", "n_trials"),
+    "n_hw_warmup": ("hw", "n_warmup"),
+    "hw_pool": ("hw", "pool_size"),
+    "n_sw_trials": ("sw", "n_trials"),
+    "n_sw_warmup": ("sw", "n_warmup"),
+    "sw_pool": ("sw", "pool_size"),
+    "backend": ("engine", "backend"),
+    "batched": ("engine", "batched"),
+    "use_cache": ("engine", "use_cache"),
+    "gp_refit_every": ("engine", "gp_refit_every"),
+    "seed": (None, "seed"),
+    "verbose": (None, "verbose"),
+    # acquisition / lam / surrogate applied to BOTH loops (the legacy API had
+    # one knob); layer_batched maps onto engine.strategy (see below).
+}
+_SHARED_SEARCH_KEYS = ("acquisition", "lam", "surrogate")
+
+
+def config_from_legacy_kwargs(**kw) -> CodesignConfig:
+    """Map the pre-config `codesign(**kwargs)` surface to a `CodesignConfig`.
+
+    `layer_batched` (bool | None) becomes `engine.strategy`:
+    None -> "auto", True -> "layer_batched", False -> "sequential"."""
+    sections: dict[str, dict] = {"sw": {}, "hw": {}, "engine": {}, None: {}}
+    if "layer_batched" in kw:
+        lb = kw.pop("layer_batched")
+        sections["engine"]["strategy"] = (
+            "auto" if lb is None else "layer_batched" if lb else "sequential")
+    for key in _SHARED_SEARCH_KEYS:
+        if key in kw:
+            v = kw.pop(key)
+            sections["sw"][key] = v
+            sections["hw"][key] = v
+    for key, value in kw.items():
+        if key not in LEGACY_KWARG_MAP:
+            raise TypeError(
+                f"codesign() got an unexpected keyword argument {key!r}; "
+                f"valid legacy kwargs: {sorted(LEGACY_KWARG_MAP) + ['layer_batched', *_SHARED_SEARCH_KEYS]}")
+        section, field = LEGACY_KWARG_MAP[key]
+        sections[section][field] = value
+    return CodesignConfig(
+        sw=SWSearchConfig(**sections["sw"]),
+        hw=HWSearchConfig(**sections["hw"]),
+        engine=EngineConfig(**sections["engine"]),
+        **sections[None],
+    )

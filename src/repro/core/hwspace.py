@@ -49,6 +49,11 @@ class HardwareSpace:
     base: HardwareConfig | None = None
     # evaluate_fn(hw) -> (utility | None, feasible); injected by the nested driver.
     evaluate_fn: Callable[[HardwareConfig], tuple[float | None, bool]] | None = None
+    # prefetch_fn(pool): optional batch hook, called once with the whole pool
+    # before evaluate_batch's scalar loop.  The nested driver's probe-fanout
+    # strategy injects it to run ALL warmup probes' inner software searches as
+    # one stacked multi-run fan-out; the loop below then reads cache hits.
+    prefetch_fn: Callable[[list[HardwareConfig]], None] | None = None
     name: str = "hardware"
     # Pool sampling + featurization take the packed-array protocol; evaluation
     # itself is the nested inner search and stays scalar (see module
@@ -128,7 +133,12 @@ class HardwareSpace:
 
     def evaluate_batch(self, pool) -> tuple[np.ndarray, np.ndarray]:
         """Scalar evaluation per config (each is a full inner software search;
-        only the BO warmup calls this, on a handful of points)."""
+        only the BO warmup calls this, on a handful of points).  When a
+        `prefetch_fn` is injected, the whole pool is handed to it first --
+        the probe-fanout strategy fans the pool's inner searches out as one
+        stacked multi-run program, and the loop below hits its cache."""
+        if self.prefetch_fn is not None:
+            self.prefetch_fn(list(pool))
         vals = np.full(len(pool), -np.inf)
         feas = np.zeros(len(pool), dtype=bool)
         for i, hw in enumerate(pool):

@@ -7,27 +7,41 @@ EDP that the hardware optimizer sees.  The hardware objective is noisy (the
 inner search is stochastic) -> noise kernel on; a hardware point with no
 discoverable mapping for some layer is an *unknown-constraint* violation.
 
-The per-layer searches of one hardware probe are independent, so on the JAX
-backend `eval_hw` advances them *layer-batched*: one `bo_maximize_many` call
-replaces the L sequential per-layer `optimize_software` runs, collapsing each
-BO round's L evaluation dispatches and L surrogate refits into one fused
-device program plus one batched GP fit (`codesign(layer_batched=...)`; the
-default picks layer-batched exactly when the backend is "jax" and falls back
-to the sequential path on NumPy).  The (hw, layer) result cache is shared by
-both paths.
+The search is configured by one typed, serializable `CodesignConfig`
+(`repro.core.config`) and driven by a `CodesignEngine`, which owns the
+(hw, layer) -> best-mapping cache, the inner-seed stream, and a pluggable
+*probe-evaluation strategy* (`PROBE_STRATEGIES`):
+
+  "sequential"     L per-layer `optimize_software` searches per hardware probe
+  "layer_batched"  one lockstep `bo_maximize_many` call per probe: the L
+                   per-layer searches advance together, one fused device
+                   program + one stacked GP fit per BO round
+  "probe_fanout"   layer_batched per probe, PLUS the outer loop's H warmup
+                   probes -- independent work items -- fanned out as ONE
+                   H*L-run stacked `bo_maximize_many` (each run seeded exactly
+                   as its probe's sequential search would be, so results are
+                   identical; on the JAX backend every BO round is a single
+                   (H*L*B,)-row fused dispatch)
+  "auto"           layer_batched when the backend is "jax", else sequential
+
+`codesign(**legacy_kwargs)` remains as a thin deprecation shim with pinned
+result parity (tests/test_config_api.py).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Sequence
 
 import numpy as np
 
-from repro.core.bo import (BOResult, InfeasibleSpace, bo_maximize,
-                           bo_maximize_many)
+from repro.core.bo import (BOResult, InfeasibleSpace, _resolve_search_config,
+                           bo_maximize, bo_maximize_many)
+from repro.core.config import (CodesignConfig, EngineConfig, SWSearchConfig,
+                               config_from_legacy_kwargs)
 from repro.core.hwspace import HardwareSpace
-from repro.core.swspace import SoftwareSpace, default_backend
+from repro.core.swspace import SoftwareSpace
 from repro.timeloop.arch import HardwareConfig
 from repro.timeloop.mapping import Mapping
 from repro.timeloop.model import evaluate
@@ -43,33 +57,58 @@ class CoDesignResult:
     layer_edps: dict[str, float]
 
 
+_SEARCH_FIELDS = {f.name for f in dataclasses.fields(SWSearchConfig)}
+_ENGINE_FIELDS = {f.name for f in dataclasses.fields(EngineConfig)}
+
+
+def _split_config(config, engine, overrides):
+    """Normalize (search config, engine config, legacy kwarg overrides) into
+    one validated pair.  Overrides are the configs' own field names -- search
+    fields (n_trials, pool_size, ...) land on the search config, engine fields
+    (backend, batched, gp_refit_every, pallas_mode, ...) on the engine config;
+    anything else raises TypeError."""
+    search_kw = {k: overrides.pop(k) for k in list(overrides)
+                 if k in _SEARCH_FIELDS}
+    engine_kw = {k: overrides.pop(k) for k in list(overrides)
+                 if k in _ENGINE_FIELDS}
+    if overrides:
+        raise TypeError(f"unexpected keyword argument(s) {sorted(overrides)}; "
+                        f"valid: {sorted(_SEARCH_FIELDS | _ENGINE_FIELDS)}")
+    cfg = _resolve_search_config(config, search_kw)  # shared type-check site
+    if engine is not None and not isinstance(engine, EngineConfig):
+        raise TypeError(f"engine must be an EngineConfig, got {engine!r}")
+    eng = engine if engine is not None else EngineConfig()
+    if engine_kw:
+        eng = dataclasses.replace(eng, **engine_kw)
+    return cfg, eng
+
+
+def _software_space(hw: HardwareConfig, layer: ConvLayer,
+                    eng: EngineConfig) -> SoftwareSpace:
+    return SoftwareSpace(hw, layer, batched=eng.batched, backend=eng.backend,
+                         pallas_mode=eng.pallas_mode)
+
+
 def optimize_software(
     hw: HardwareConfig,
     layer: ConvLayer,
-    n_trials: int = 250,
-    n_warmup: int = 30,
-    pool_size: int = 150,
-    acquisition: str = "lcb",
-    lam: float = 1.0,
-    surrogate: str = "gp_linear",
+    config: SWSearchConfig | None = None,
+    *,
     seed: int = 0,
-    batched: bool = True,
-    backend: str | None = None,  # evaluation engine: "numpy" | "jax"
-    gp_refit_every: int = 1,
+    engine: EngineConfig | None = None,
+    **overrides,
 ) -> BOResult:
-    space = SoftwareSpace(hw, layer, batched=batched, backend=backend)
+    """One per-layer software-mapping search (paper §4.3).  Configured by a
+    `SWSearchConfig` + `EngineConfig`; individual fields may be overridden by
+    keyword (`optimize_software(hw, layer, n_trials=60, backend="jax")`)."""
+    cfg, eng = _split_config(config, engine, overrides)
+    space = _software_space(hw, layer, eng)
     try:
         return bo_maximize(
-            space,
-            n_trials=n_trials,
-            n_warmup=n_warmup,
-            pool_size=pool_size,
-            acquisition=acquisition,
-            lam=lam,
-            surrogate=surrogate,
+            space, cfg,
             noisy=False,  # deterministic evaluator (paper §4.3)
             seed=seed,
-            gp_refit_every=gp_refit_every,
+            gp_refit_every=eng.gp_refit_every,
         )
     except InfeasibleSpace:
         # No feasible mapping could even be sampled -> report an empty result;
@@ -80,16 +119,11 @@ def optimize_software(
 def optimize_software_many(
     hw: HardwareConfig,
     layers: Sequence[ConvLayer],
-    n_trials: int = 250,
-    n_warmup: int = 30,
-    pool_size: int = 150,
-    acquisition: str = "lcb",
-    lam: float = 1.0,
-    surrogate: str = "gp_linear",
+    config: SWSearchConfig | None = None,
+    *,
     seed: int = 0,
-    batched: bool = True,
-    backend: str | None = None,
-    gp_refit_every: int = 1,
+    engine: EngineConfig | None = None,
+    **overrides,
 ) -> list[BOResult]:
     """Layer-batched twin of `optimize_software`: the L per-layer searches of
     one hardware probe advance in lockstep through `bo_maximize_many` (each
@@ -97,139 +131,253 @@ def optimize_software_many(
     evaluation program + one stacked surrogate fit per BO round.  A layer with
     no sampleable mapping yields an empty `BOResult` (best_point None), same
     as `optimize_software`'s InfeasibleSpace handling."""
-    spaces = [SoftwareSpace(hw, layer, batched=batched, backend=backend)
-              for layer in layers]
+    cfg, eng = _split_config(config, engine, overrides)
+    spaces = [_software_space(hw, layer, eng) for layer in layers]
     return bo_maximize_many(
-        spaces,
-        n_trials=n_trials,
-        n_warmup=n_warmup,
-        pool_size=pool_size,
-        acquisition=acquisition,
-        lam=lam,
-        surrogate=surrogate,
+        spaces, cfg,
         noisy=False,  # deterministic evaluator (paper §4.3)
         seed=seed,
-        gp_refit_every=gp_refit_every,
+        gp_refit_every=eng.gp_refit_every,
     )
+
+
+def optimize_software_fanout(
+    items: Sequence[tuple[HardwareConfig, ConvLayer]],
+    config: SWSearchConfig | None = None,
+    *,
+    seeds: Sequence[int],
+    engine: EngineConfig | None = None,
+) -> list[BOResult]:
+    """Probe-fanout twin of `optimize_software_many`: one stacked multi-run
+    search over (hardware, layer) pairs that may span *different* hardware
+    probes, each run seeded individually (`seeds[i]`, exactly as the
+    sequential per-probe calls would be).  On the JAX backend every BO round
+    of all H*L runs is a single (H*L*B,)-row fused device program -- the
+    hardware vector rides per row, like the layer vector."""
+    cfg, eng = _split_config(config, engine, {})
+    spaces = [_software_space(hw, layer, eng) for hw, layer in items]
+    return bo_maximize_many(
+        spaces, cfg,
+        noisy=False,
+        seed=list(seeds),
+        gp_refit_every=eng.gp_refit_every,
+    )
+
+
+# --- probe-evaluation strategies -------------------------------------------------
+
+
+def _cache_entry(hw: HardwareConfig, layer: ConvLayer,
+                 r: BOResult) -> tuple[Mapping | None, float]:
+    if r.best_point is None:
+        return (None, float("inf"))
+    return (r.best_point, evaluate(hw, r.best_point, layer).edp)
+
+
+class ProbeStrategy:
+    """How a `CodesignEngine` evaluates one hardware probe's inner searches.
+
+    `evaluate_probe` must fill `engine.cache` for the probe's layers (honoring
+    `use_cache`); `prefetch` optionally batches the inner searches of a whole
+    warmup pool ahead of the per-probe calls (the probe-fanout capability).
+    Register implementations in `PROBE_STRATEGIES`."""
+
+    name = "base"
+
+    def evaluate_probe(self, engine: "CodesignEngine", hw: HardwareConfig,
+                       seed: int) -> None:
+        raise NotImplementedError
+
+    def prefetch(self, engine: "CodesignEngine",
+                 pool: Sequence[HardwareConfig]) -> None:
+        """Called once with the outer warmup pool before its probes are
+        evaluated; default: nothing (probes evaluate one at a time)."""
+
+
+class SequentialProbes(ProbeStrategy):
+    """L sequential per-layer `optimize_software` searches per probe, stopping
+    at the first layer with no feasible mapping (the pre-engine behavior)."""
+
+    name = "sequential"
+
+    def evaluate_probe(self, engine, hw, seed):
+        cfg = engine.config
+        for layer in engine._layers:
+            key = (hw, layer)
+            if not cfg.engine.use_cache or key not in engine.cache:
+                r = optimize_software(hw, layer, cfg.sw, seed=seed,
+                                      engine=cfg.engine)
+                engine.cache[key] = _cache_entry(hw, layer, r)
+            if engine.cache[key][0] is None:
+                break  # unknown constraint: remaining layers never searched
+
+
+class LayerBatchedProbes(ProbeStrategy):
+    """One lockstep `bo_maximize_many` call per probe: every layer this probe
+    still needs advances in one multi-run search (each layer seeded exactly as
+    its sequential `optimize_software` call would be, so cached entries are
+    interchangeable between strategies)."""
+
+    name = "layer_batched"
+
+    def evaluate_probe(self, engine, hw, seed):
+        cfg = engine.config
+        todo = list(dict.fromkeys(
+            layer for layer in engine._layers
+            if not cfg.engine.use_cache or (hw, layer) not in engine.cache))
+        if not todo:
+            return
+        rs = optimize_software_many(hw, todo, cfg.sw, seed=seed,
+                                    engine=cfg.engine)
+        for layer, r in zip(todo, rs):
+            engine.cache[(hw, layer)] = _cache_entry(hw, layer, r)
+
+
+class ProbeFanoutProbes(LayerBatchedProbes):
+    """Layer-batched per-probe evaluation PLUS warmup fan-out: the outer
+    loop's H warmup probes are independent, so their H*L inner searches run as
+    ONE stacked `bo_maximize_many` (per-run seeds preserve each probe's
+    sequential seeding; duplicate probes keep their first occurrence's seed,
+    exactly as the cache would serve them sequentially).  Requires
+    `use_cache=True` (validated at `EngineConfig` construction)."""
+
+    name = "probe_fanout"
+
+    def prefetch(self, engine, pool):
+        base = engine._inner_seed
+        items: list[tuple[HardwareConfig, ConvLayer]] = []
+        seeds: list[int] = []
+        seen: set[HardwareConfig] = set()
+        for i, hw in enumerate(pool):
+            if hw in seen:
+                continue  # later duplicate -> cache hit at evaluation time
+            seen.add(hw)
+            for layer in dict.fromkeys(engine._layers):
+                if (hw, layer) in engine.cache:
+                    continue
+                items.append((hw, layer))
+                seeds.append(base + i + 1)  # the seed eval_hw will hold then
+        if not items:
+            return
+        rs = optimize_software_fanout(items, engine.config.sw, seeds=seeds,
+                                      engine=engine.config.engine)
+        for (hw, layer), r in zip(items, rs):
+            engine.cache[(hw, layer)] = _cache_entry(hw, layer, r)
+
+
+PROBE_STRATEGIES: dict[str, type[ProbeStrategy]] = {
+    cls.name: cls
+    for cls in (SequentialProbes, LayerBatchedProbes, ProbeFanoutProbes)
+}
+
+
+# --- the engine ------------------------------------------------------------------
+
+
+class CodesignEngine:
+    """Runs the nested co-design search for one `CodesignConfig`.
+
+    Owns the pieces the old kwarg pipeline threaded implicitly:
+
+      * the (hw, layer) -> (best mapping | None, EDP) cache.  The outer BO
+        routinely re-probes hardware points (acquisition argmax over a sampled
+        pool repeats configs, and pool candidates collide across trials); both
+        keys are frozen dataclasses, so a hit skips the whole inner search.
+        The inner search is stochastic, so caching also makes repeated probes
+        of one hardware point consistent.  The cache is shared by all probe
+        strategies (same keys, same values) and persists across `run` calls.
+      * the inner-seed stream: probe i of a run gets seed*7919 + i + 1, the
+        same stream every strategy reproduces (fan-out included).
+      * the probe-evaluation strategy, resolved from
+        `config.engine.strategy` against `PROBE_STRATEGIES`.
+    """
+
+    def __init__(self, config: CodesignConfig | None = None):
+        self.config = config if config is not None else CodesignConfig()
+        self.backend = self.config.engine.resolve_backend()
+        self.strategy_name = self.config.engine.resolve_strategy()
+        self.strategy = PROBE_STRATEGIES[self.strategy_name]()
+        self.cache: dict[tuple[HardwareConfig, ConvLayer],
+                         tuple[Mapping | None, float]] = {}
+        self._layers: list[ConvLayer] = []
+        self._inner_seed = 0
+
+    def run(self, layers: Sequence[ConvLayer]) -> CoDesignResult:
+        cfg = self.config
+        self._layers = list(layers)
+        self._inner_seed = cfg.seed * 7919
+        best = {"edp": np.inf, "hw": None, "maps": None, "per_layer": None}
+
+        def eval_hw(hw: HardwareConfig):
+            self._inner_seed += 1
+            self.strategy.evaluate_probe(self, hw, self._inner_seed)
+            total_edp = 0.0
+            maps: dict[str, Mapping] = {}
+            per_layer: dict[str, float] = {}
+            for layer in self._layers:
+                m, edp = self.cache.get((hw, layer), (None, float("inf")))
+                if m is None:
+                    return None, False  # unknown constraint: no feasible mapping
+                total_edp += edp
+                maps[layer.name] = m
+                per_layer[layer.name] = edp
+            if total_edp < best["edp"]:
+                best.update(edp=total_edp, hw=hw, maps=maps,
+                            per_layer=per_layer)
+            if cfg.verbose:
+                print(f"  hw {hw.pe_mesh_x}x{hw.pe_mesh_y} "
+                      f"lb=({hw.lb_input},{hw.lb_weight},{hw.lb_output}) "
+                      f"-> model EDP {total_edp:.3e}")
+            return -float(np.log10(total_edp)), True
+
+        space = HardwareSpace(
+            num_pes=cfg.hw.num_pes,
+            evaluate_fn=eval_hw,
+            prefetch_fn=lambda pool: self.strategy.prefetch(self, pool),
+        )
+        hw_result = bo_maximize(
+            space, cfg.hw,
+            noisy=True,  # inner search stochasticity (paper §4.2)
+            seed=cfg.seed,
+        )
+        return CoDesignResult(
+            best_hw=best["hw"],
+            best_mappings=best["maps"],
+            best_model_edp=best["edp"],
+            hw_result=hw_result,
+            layer_edps=best["per_layer"],
+        )
 
 
 def codesign(
     layers: Sequence[ConvLayer],
-    num_pes: int = 168,
-    n_hw_trials: int = 50,
-    n_sw_trials: int = 250,
-    n_hw_warmup: int = 5,
-    n_sw_warmup: int = 30,
-    sw_pool: int = 150,
-    hw_pool: int = 150,
-    acquisition: str = "lcb",
-    lam: float = 1.0,
-    surrogate: str = "gp_linear",
-    seed: int = 0,
-    verbose: bool = False,
-    batched: bool = True,
-    use_cache: bool = True,
-    backend: str | None = None,  # inner-engine selector: "numpy" | "jax"
-    layer_batched: bool | None = None,  # None -> backend == "jax"
-    gp_refit_every: int = 1,  # inner-loop GP amortization stride
+    config: CodesignConfig | None = None,
+    **legacy_kwargs,
 ) -> CoDesignResult:
-    # Layer-batched inner search: one bo_maximize_many call per hardware probe
-    # instead of L sequential optimize_software calls.  Defaults on for the
-    # JAX engine (where the per-round work fuses into one device program and
-    # one stacked GP fit) and off for NumPy (which keeps the existing
-    # sequential path; pass layer_batched=True to force the lockstep engine).
-    if layer_batched is None:
-        layer_batched = batched and (backend or default_backend()) == "jax"
-    inner_seed = [seed * 7919]
-    best = {"edp": np.inf, "hw": None, "maps": None, "per_layer": None}
-    # (hw, layer) -> (best mapping | None, edp).  The outer BO routinely
-    # re-probes hardware points (acquisition argmax over a sampled pool repeats
-    # configs, and pool candidates collide across trials); both are frozen
-    # dataclasses, so the pair keys a dict and a hit skips the whole inner
-    # 250-trial search.  The inner search is stochastic, so caching also makes
-    # repeated probes of one hardware point consistent.  The cache is shared
-    # by the sequential and layer-batched paths (same keys, same values).
-    inner_cache: dict[tuple[HardwareConfig, ConvLayer], tuple[Mapping | None, float]] = {}
+    """Run the nested co-design search.
 
-    def best_mapping(hw: HardwareConfig, layer: ConvLayer) -> tuple[Mapping | None, float]:
-        key = (hw, layer)
-        if not use_cache or key not in inner_cache:
-            r = optimize_software(
-                hw, layer,
-                n_trials=n_sw_trials, n_warmup=n_sw_warmup, pool_size=sw_pool,
-                acquisition=acquisition, lam=lam, surrogate=surrogate,
-                seed=inner_seed[0], batched=batched, backend=backend,
-                gp_refit_every=gp_refit_every,
-            )
-            if r.best_point is None:
-                inner_cache[key] = (None, float("inf"))
-            else:
-                inner_cache[key] = (r.best_point, evaluate(hw, r.best_point, layer).edp)
-        return inner_cache[key]
-
-    def search_layers_batched(hw: HardwareConfig) -> None:
-        """Fill the (hw, layer) cache for every layer this probe still needs,
-        advancing all of those searches in one lockstep bo_maximize_many call
-        (each layer seeded exactly as its sequential optimize_software call
-        would be, so cached entries are interchangeable between paths)."""
-        todo = list(dict.fromkeys(
-            layer for layer in layers
-            if not use_cache or (hw, layer) not in inner_cache))
-        if not todo:
-            return
-        rs = optimize_software_many(
-            hw, todo,
-            n_trials=n_sw_trials, n_warmup=n_sw_warmup, pool_size=sw_pool,
-            acquisition=acquisition, lam=lam, surrogate=surrogate,
-            seed=inner_seed[0], batched=batched, backend=backend,
-            gp_refit_every=gp_refit_every,
-        )
-        for layer, r in zip(todo, rs):
-            if r.best_point is None:
-                inner_cache[(hw, layer)] = (None, float("inf"))
-            else:
-                inner_cache[(hw, layer)] = (
-                    r.best_point, evaluate(hw, r.best_point, layer).edp)
-
-    def eval_hw(hw: HardwareConfig):
-        inner_seed[0] += 1
-        if layer_batched:
-            search_layers_batched(hw)
-        total_edp = 0.0
-        maps: dict[str, Mapping] = {}
-        per_layer: dict[str, float] = {}
-        for layer in layers:
-            m, edp = (inner_cache[(hw, layer)] if layer_batched
-                      else best_mapping(hw, layer))
-            if m is None:
-                return None, False  # unknown constraint: no feasible mapping found
-            total_edp += edp
-            maps[layer.name] = m
-            per_layer[layer.name] = edp
-        if total_edp < best["edp"]:
-            best.update(edp=total_edp, hw=hw, maps=maps, per_layer=per_layer)
-        if verbose:
-            print(f"  hw {hw.pe_mesh_x}x{hw.pe_mesh_y} "
-                  f"lb=({hw.lb_input},{hw.lb_weight},{hw.lb_output}) "
-                  f"-> model EDP {total_edp:.3e}")
-        return -float(np.log10(total_edp)), True
-
-    space = HardwareSpace(num_pes=num_pes, evaluate_fn=eval_hw)
-    hw_result = bo_maximize(
-        space,
-        n_trials=n_hw_trials,
-        n_warmup=n_hw_warmup,
-        pool_size=hw_pool,
-        acquisition=acquisition,
-        lam=lam,
-        surrogate=surrogate,
-        noisy=True,  # inner search stochasticity (paper §4.2)
-        seed=seed,
-    )
-    return CoDesignResult(
-        best_hw=best["hw"],
-        best_mappings=best["maps"],
-        best_model_edp=best["edp"],
-        hw_result=hw_result,
-        layer_edps=best["per_layer"],
-    )
+    The supported surface is `codesign(layers, config=CodesignConfig(...))`
+    (or `CodesignEngine(config).run(layers)` to keep the cache across runs).
+    The pre-config kwargs (`n_hw_trials=...`, `sw_pool=...`,
+    `layer_batched=...`, ...) still work as a thin shim -- mapped through
+    `config_from_legacy_kwargs`, result parity pinned in
+    tests/test_config_api.py -- but emit a DeprecationWarning; the old-kwarg
+    -> config-field table is in the README's "Search API" section."""
+    if config is not None and not isinstance(config, CodesignConfig):
+        # Loud break for pre-config positional callers (num_pes used to be
+        # the second positional argument).
+        raise TypeError(
+            f"config must be a CodesignConfig, got {config!r}; legacy "
+            f"options must be passed by keyword (num_pes=...)")
+    if legacy_kwargs:
+        if config is not None:
+            raise TypeError(
+                "pass either config= or legacy keyword arguments, not both")
+        warnings.warn(
+            "codesign(**kwargs) is deprecated: build a CodesignConfig and "
+            "call codesign(layers, config=...) or "
+            "CodesignEngine(config).run(layers) (see the README 'Search API' "
+            "migration table)",
+            DeprecationWarning, stacklevel=2)
+        config = config_from_legacy_kwargs(**legacy_kwargs)
+    return CodesignEngine(config).run(layers)

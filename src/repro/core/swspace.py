@@ -29,6 +29,7 @@ import os
 
 import numpy as np
 
+from repro.core.config import BACKENDS, PALLAS_MODES, validate_choice
 from repro.timeloop import batch as tlb
 from repro.timeloop.arch import HardwareConfig
 from repro.timeloop.mapping import (
@@ -58,9 +59,6 @@ FEATURE_NAMES = (
     "log_macs_per_pe",
 )
 
-BACKENDS = ("numpy", "jax")
-
-
 def default_backend() -> str:
     """Engine selected by $REPRO_BACKEND, falling back to "numpy"."""
     return os.environ.get("REPRO_BACKEND", "numpy")
@@ -73,13 +71,14 @@ class SoftwareSpace:
     name: str = "software"
     batched: bool = True  # expose the batched protocol to the BO loop
     backend: str | None = None  # "numpy" | "jax" | None -> $REPRO_BACKEND
+    pallas_mode: str | None = None  # "jnp"|"pallas"|"interpret"|None -> auto
 
     def __post_init__(self) -> None:
         if self.backend is None:
             self.backend = default_backend()
-        if self.backend not in BACKENDS:
-            raise ValueError(
-                f"backend must be one of {BACKENDS}, got {self.backend!r}")
+        validate_choice("backend", self.backend, BACKENDS)
+        validate_choice("pallas_mode", self.pallas_mode, PALLAS_MODES,
+                        optional=True)
         # One fused device program computes validity+EDP+features together, so
         # features_batch / evaluate_batch / features_batch_device on the same
         # pool object must share a single dispatch (the BO warmup calls two of
@@ -92,7 +91,8 @@ class SoftwareSpace:
         from repro.timeloop import batch_jax as jtlb
 
         if self._fwd_cache is None or self._fwd_cache[0] is not pool:
-            self._fwd_cache = (pool, jtlb.forward_device(self.hw, pool, self.layer))
+            self._fwd_cache = (pool, jtlb.forward_device(
+                self.hw, pool, self.layer, mode=self.pallas_mode))
         return self._fwd_cache[1]
 
     @property
@@ -180,22 +180,24 @@ class SoftwareSpace:
 
 @dataclasses.dataclass
 class LayerStackSpace:
-    """L per-layer `SoftwareSpace`s over one hardware config, advanced as one
-    stacked batch -- the layer-batched nested search's packing layer.
+    """L `SoftwareSpace` runs advanced as one stacked batch -- the packing
+    layer of the layer-batched nested search (all runs share one hardware
+    probe) and of the probe-fanout warmup (runs span H hardware probes; the
+    hardware vector rides per row exactly like the layer vector).
 
     The multi-run BO engine (`repro.core.bo.bo_maximize_many`) hands this a
-    list of per-run candidate pools (one `MappingBatch` per layer) and gets
+    list of per-run candidate pools (one `MappingBatch` per run) and gets
     back (L, B)-shaped results:
 
       * `backend="jax"`: all pools are packed into a single (L*B, 5, 6) batch
         and evaluated by ONE fused jitted device program per BO round
-        (`batch_jax.forward_device_stacked`, the layer vector per row), with
-        `features_stacked_device` keeping the feature matrix device-resident
-        for the fused GP-acquisition scoring chain;
+        (`batch_jax.forward_device_stacked`, hardware + layer vectors per
+        row), with `features_stacked_device` keeping the feature matrix
+        device-resident for the fused GP-acquisition scoring chain;
       * `backend="numpy"`: per-space vectorized NumPy calls, stacked host-side
         (no fused program, but the stacked-GP surrogate path still applies).
 
-    Per-row numerics are identical to the per-layer `SoftwareSpace` calls, so
+    Per-row numerics are identical to the per-run `SoftwareSpace` calls, so
     a multi-run search reproduces L sequential `bo_maximize` runs.
     """
 
@@ -203,29 +205,30 @@ class LayerStackSpace:
 
     def __post_init__(self) -> None:
         assert self.spaces, "empty stack"
-        hw = self.spaces[0].hw
-        backend = self.spaces[0].backend
-        assert all(s.hw == hw and s.backend == backend for s in self.spaces)
+        s0 = self.spaces[0]
+        assert all(s.backend == s0.backend and s.pallas_mode == s0.pallas_mode
+                   for s in self.spaces)
 
     @classmethod
     def maybe(cls, spaces) -> "LayerStackSpace | None":
         """Build a stack when the runs are stackable: all `SoftwareSpace`s with
-        the batched protocol, one shared hardware config, one backend.
-        Returns None otherwise (the BO engine then falls back to lockstep
-        per-space calls)."""
+        the batched protocol, one backend, one Pallas mode (hardware configs
+        may differ per run -- the probe-fanout case).  Returns None otherwise
+        (the BO engine then falls back to lockstep per-space calls)."""
         spaces = tuple(spaces)
         if not spaces or not all(isinstance(s, SoftwareSpace) for s in spaces):
             return None
         if not all(s.supports_batch for s in spaces):
             return None
-        if not all(s.hw == spaces[0].hw and s.backend == spaces[0].backend
+        if not all(s.backend == spaces[0].backend
+                   and s.pallas_mode == spaces[0].pallas_mode
                    for s in spaces):
             return None
         return cls(spaces)
 
     @property
-    def hw(self) -> HardwareConfig:
-        return self.spaces[0].hw
+    def hws(self) -> list[HardwareConfig]:
+        return [s.hw for s in self.spaces]
 
     @property
     def backend(self) -> str:
@@ -256,7 +259,8 @@ class LayerStackSpace:
         from repro.timeloop import batch_jax as jtlb
 
         return jtlb.forward_device_stacked(
-            self.hw, pools, [s.layer for s in self.spaces])
+            self.hws, pools, [s.layer for s in self.spaces],
+            mode=self.spaces[0].pallas_mode)
 
     def forward_stacked(self, pools, runs=None) -> dict[str, np.ndarray]:
         """Host-side stacked forward over per-run pools (all of equal length):

@@ -23,13 +23,16 @@ Operand layout (all leading dim B):
   relo   (B, 2, 3, 6)  0/1 relevance per [level, tensor(W,I,O), loop position]
   tiles  (B, 2, 3)     [lb, gb] x [W, I, O] tile sizes
   sp     (B, 6)        [sp_rel_W, sp_rel_I, sp_rel_O, sp_all, used_pes, macs]
-  consts (7,)          [e_mac, e_lb, e_noc, e_gb, e_dram, gb_bw, dram_bw]
+  consts (B, 7)        [e_mac, e_lb, e_noc, e_gb, e_dram, gb_bw, dram_bw]
 
-`macs` rides with the per-row operands (not the consts) because rows of one
-batch may belong to *different layers*: the layer-stacked nested search packs
-all layers' candidate pools into a single (L*B,)-row program per hardware
-probe, so every layer-dependent quantity must be per-row.  The hardware-only
-energy/bandwidth constants stay shared.
+`macs` rides with the per-row operands (not a shared constant) because rows of
+one batch may belong to *different layers*: the layer-stacked nested search
+packs all layers' candidate pools into a single (L*B,)-row program per
+hardware probe, so every layer-dependent quantity must be per-row.  The
+energy/bandwidth constants are per-row for the same reason one level up: the
+probe-fanout nested search stacks the pools of H different *hardware* probes
+into one (H*L*B,)-row program, so the hardware-dependent quantities ride per
+row too (single-probe callers just broadcast one row).
 
 Outputs:
 
@@ -78,7 +81,7 @@ def reduce_edp_terms(fo, relo, tiles, sp, consts):
         return jnp.prod(jnp.where(include, f, one), axis=1)
 
     e_mac, e_lb, e_noc, e_gb, e_dram, gb_bw, dram_bw = (
-        consts[i] for i in range(7)
+        consts[:, i] for i in range(7)
     )
     macs = sp[:, 5]
 
@@ -155,7 +158,7 @@ def edp_reduce(fo, relo, tiles, sp, consts, *, block: int = 128,
             pl.BlockSpec((blk, 2, N_TENSORS, N_DIMS), lambda i: (i, 0, 0, 0)),
             pl.BlockSpec((blk, 2, N_TENSORS), lambda i: (i, 0, 0)),
             pl.BlockSpec((blk, 6), lambda i: (i, 0)),
-            pl.BlockSpec((7,), lambda i: (0,)),
+            pl.BlockSpec((blk, 7), lambda i: (i, 0)),
         ],
         out_specs=[
             pl.BlockSpec((blk, 3), lambda i: (i, 0)),

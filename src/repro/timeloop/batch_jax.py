@@ -21,11 +21,14 @@ through the Pallas interpreter (`mode="interpret"`, exercised in CI).
 Hardware and layer parameters enter as *arrays* (`hw_vec` / `layer_vec`), not
 static arguments, so one compiled program serves every (hardware, layer) pair
 the nested co-design search probes; pools are padded to power-of-two buckets so
-the jit cache stays small across pool sizes.  The layer vector is carried *per
-row* -- the rows of one batch may belong to different layers -- which is what
-lets `forward_device_stacked` pack all L layers' candidate pools of one
-hardware probe into a single (L*B,)-row device program (the layer-batched
-nested search: one fused dispatch per BO round instead of L sequential ones).
+the jit cache stays small across pool sizes.  Both vectors are carried *per
+row* -- the rows of one batch may belong to different layers AND different
+hardware configs -- which is what lets `forward_device_stacked` pack candidate
+pools into a single stacked device program: all L layers of one hardware probe
+(the layer-batched nested search, (L*B,) rows), or all H*L (probe, layer)
+searches of the outer loop's warmup fan-out (`strategy="probe_fanout"`,
+(H*L*B,) rows).  Either way it is the *same* jitted `_forward` program as the
+single-layer path, so per-row results are identical.
 
 Precision: the engine computes in float64 by default (scoped via
 `jax.experimental.enable_x64` -- no global flag is touched), which keeps parity
@@ -104,6 +107,11 @@ def layer_vecs(layers) -> np.ndarray:
     return np.stack([layer_vec(layer) for layer in layers])
 
 
+def hw_vecs(hws) -> np.ndarray:
+    """(L, 15) stacked hardware vectors for the probe-stacked forward."""
+    return np.stack([hw_vec(hw) for hw in hws])
+
+
 def _prep_one(factors, order_gb, order_dram, hwv, layv):
     """Per-mapping tiles, validity, and gathered reduction operands.
 
@@ -149,15 +157,16 @@ def _prep_one(factors, order_gb, order_dram, hwv, layv):
 def _forward(factors, order_gb, order_dram, hwv, layv, mode: str):
     """The fused device program: validity + EDP + features for a whole pool.
 
-    `layv` is (B, 8) -- one layer vector per row -- so a single compiled
-    program serves both the single-layer path (rows share one layer) and the
-    layer-stacked path (rows span L layers).
+    `hwv` is (B, 15) and `layv` is (B, 8) -- one hardware and one layer vector
+    per row -- so a single compiled program serves the single-(hw, layer)
+    path (rows share both), the layer-stacked path (rows span L layers), and
+    the probe-stacked path (rows span H*L (hardware, layer) pairs).
     """
     ok, fo, relo, tl, spv, sx, sy = jax.vmap(
-        _prep_one, in_axes=(0, 0, 0, None, 0)
+        _prep_one, in_axes=(0, 0, 0, 0, 0)
     )(factors, order_gb, order_dram, hwv, layv)
 
-    consts = hwv[H_EMAC:]
+    consts = hwv[:, H_EMAC:]
     if mode == "jnp":
         ev, trips = reduce_edp_terms(fo, relo, tl, spv, consts)
     elif mode in ("pallas", "interpret"):
@@ -170,12 +179,12 @@ def _forward(factors, order_gb, order_dram, hwv, layv, mode: str):
     used = spv[:, 4]
     feats = jnp.stack(
         [
-            tl[:, 0, 1] / hwv[H_LBI],
-            tl[:, 0, 0] / hwv[H_LBW],
-            tl[:, 0, 2] / hwv[H_LBO],
-            jnp.sum(tl[:, 1, :], axis=1) / hwv[H_GBE],
-            sx / hwv[H_MX],
-            sy / hwv[H_MY],
+            tl[:, 0, 1] / hwv[:, H_LBI],
+            tl[:, 0, 0] / hwv[:, H_LBW],
+            tl[:, 0, 2] / hwv[:, H_LBO],
+            jnp.sum(tl[:, 1, :], axis=1) / hwv[:, H_GBE],
+            sx / hwv[:, H_MX],
+            sy / hwv[:, H_MY],
             *[jnp.log1p(trips[:, j]) for j in range(2 * len(TENSORS))],
             jnp.log1p(used),
             jnp.log1p(layv[:, L_MACS] / used),
@@ -242,7 +251,7 @@ def forward_device(
             jnp.asarray(factors, dtype),
             jnp.asarray(orders[0], jnp.int32),
             jnp.asarray(orders[1], jnp.int32),
-            jnp.asarray(hw_vec(hw), dtype),
+            jnp.asarray(np.broadcast_to(hw_vec(hw), (b, 15)), dtype),
             jnp.asarray(np.broadcast_to(layer_vec(layer), (b, 8)), dtype),
             mode=mode,
         )
@@ -250,25 +259,30 @@ def forward_device(
 
 
 def forward_device_stacked(
-    hw: HardwareConfig,
+    hw,
     pools,
     layers,
     mode: str | None = None,
     dtype: str | None = None,
 ) -> dict[str, jax.Array]:
-    """Layer-batched fused program: L per-layer pools, one device dispatch.
+    """Stacked fused program: L per-run pools, one device dispatch.
 
-    `pools` is a sequence of L `MappingBatch`es (lengths may differ) and
-    `layers` the matching `ConvLayer`s.  All pools are packed into one
-    (L*bucket,)-row batch -- the layer vector rides per row -- and evaluated by
-    the *same* jitted `_forward` program as the single-layer path, so per-row
-    results are identical to L separate `forward_device` calls.  Returns
-    device-resident arrays with a leading (L, B) shape, B = max pool length
-    (rows past a pool's own length are padding: invalid, -inf utility).
+    `pools` is a sequence of L `MappingBatch`es (lengths may differ), `layers`
+    the matching `ConvLayer`s, and `hw` either ONE `HardwareConfig` shared by
+    every run (the layer-batched nested search) or a sequence of L per-run
+    configs (the probe-fanout search, where the runs span H hardware probes).
+    All pools are packed into one (L*bucket,)-row batch -- the hardware and
+    layer vectors ride per row -- and evaluated by the *same* jitted
+    `_forward` program as the single-layer path, so per-row results are
+    identical to L separate `forward_device` calls.  Returns device-resident
+    arrays with a leading (L, B) shape, B = max pool length (rows past a
+    pool's own length are padding: invalid, -inf utility).
     """
     mode, dtype = _resolve(mode, dtype)
     L = len(pools)
     assert L == len(layers), (L, len(layers))
+    hws = [hw] * L if isinstance(hw, HardwareConfig) else list(hw)
+    assert L == len(hws), (L, len(hws))
     B = max((len(p) for p in pools), default=0)
     b = _bucket(B)
     factors = np.ones((L, b, N_LEVELS, N_DIMS), np.int64)
@@ -280,13 +294,14 @@ def forward_device_stacked(
             orders[0, k, :n] = p.order_gb
             orders[1, k, :n] = p.order_dram
     layv = np.repeat(layer_vecs(layers)[:, None, :], b, axis=1)
+    hwv = np.repeat(hw_vecs(hws)[:, None, :], b, axis=1)
     ctx = enable_x64() if dtype == "float64" else contextlib.nullcontext()
     with ctx:
         out = _forward(
             jnp.asarray(factors.reshape(L * b, N_LEVELS, N_DIMS), dtype),
             jnp.asarray(orders[0].reshape(L * b, N_DIMS), jnp.int32),
             jnp.asarray(orders[1].reshape(L * b, N_DIMS), jnp.int32),
-            jnp.asarray(hw_vec(hw), dtype),
+            jnp.asarray(hwv.reshape(L * b, 15), dtype),
             jnp.asarray(layv.reshape(L * b, 8), dtype),
             mode=mode,
         )
