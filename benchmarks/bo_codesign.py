@@ -34,7 +34,8 @@ from repro.timeloop.mapping import constrained_random_mapping, mapping_is_valid
 def bench_config(model: str, n_hw: int, n_sw: int, seed: int = 0,
                  backend: str | None = None, gp_refit_every: int = 1,
                  batched: bool = True, strategy: str = "auto",
-                 hw_warmup: int | None = None) -> CodesignConfig:
+                 hw_warmup: int | None = None, spec_k: int = 4,
+                 hw_gp_refit_every: int = 1) -> CodesignConfig:
     """The benchmark suite's reduced-budget `CodesignConfig` (pool 60, warmup
     n_sw//3 capped at 20 -- the pre-config kwarg bundle, as one object)."""
     num_pes = 256 if model == "transformer" else 168
@@ -42,11 +43,13 @@ def bench_config(model: str, n_hw: int, n_sw: int, seed: int = 0,
         sw=SWSearchConfig(n_trials=n_sw, n_warmup=min(20, n_sw // 3),
                           pool_size=60),
         hw=HWSearchConfig(n_trials=n_hw, pool_size=60, num_pes=num_pes,
+                          spec_k=spec_k,
                           **({} if hw_warmup is None
                              else {"n_warmup": hw_warmup})),
         engine=EngineConfig(backend=backend, strategy=strategy,
                             gp_refit_every=gp_refit_every, batched=batched,
-                            use_cache=batched),
+                            use_cache=batched,
+                            hw_gp_refit_every=hw_gp_refit_every),
         seed=seed,
     )
 
@@ -293,6 +296,57 @@ def probe_fanout_speedup(model: str = "resnet", n_hw: int = 4, n_sw: int = 60,
     return out
 
 
+def speculative_speedup(model: str = "resnet", n_hw: int = 11, n_sw: int = 40,
+                        seed: int = 0, reps: int = 2, spec_k: int = 8,
+                        hw_gp_refit_every: int = 8,
+                        hw_warmup: int = 2) -> dict:
+    """Speculative scored-trial fan-out vs the probe_fanout path -- the
+    ROADMAP "parallelize the outer loop beyond warmup" capability.
+
+    Both sides run with the same outer refit stride (`hw_gp_refit_every`), so
+    the outer trajectory is identical (parity pinned in
+    tests/test_speculative.py) and the ratio isolates what speculation adds:
+    inside each frozen refit window, `speculative` evaluates the window's
+    whole q-batch (the top-`spec_k` acquisition candidates) as ONE stacked
+    k*L-run `bo_maximize_many` at the window's first trial, and the window's
+    remaining trials consume pure cache hits -- per window, one wide stacked
+    search replaces up to `stride` narrower ones.  `probe_fanout` evaluates
+    the same probes one scored trial at a time.  The budget is mostly scored
+    trials (`hw_warmup=2`) because that is the phase speculation covers; the
+    per-backend cache hit-rate lands in the record (the gate's health signal:
+    a silent 0 means speculation stopped predicting the outer loop).  Timing
+    protocol matches `layer_batch_speedup`: interleaved reps, per-side
+    minimum, jit caches warmed untimed by a full run."""
+    layers = MODEL_LAYERS[model]
+    out: dict = {"model": model, "n_hw": n_hw, "n_sw": n_sw, "reps": reps,
+                 "spec_k": spec_k, "hw_gp_refit_every": hw_gp_refit_every}
+    for backend in ("numpy", "jax"):
+        cfgs = {
+            strat: bench_config(model, n_hw, n_sw, seed=seed, backend=backend,
+                                strategy=strat, hw_warmup=hw_warmup,
+                                spec_k=spec_k,
+                                hw_gp_refit_every=hw_gp_refit_every)
+            for strat in ("probe_fanout", "speculative")
+        }
+        stats = {}
+        for strat, cfg in cfgs.items():  # warm jit caches at full width
+            stats[strat] = CodesignEngine(cfg).run(layers).stats
+        times: dict[str, list[float]] = {s: [] for s in cfgs}
+        for _ in range(reps):
+            for strat, cfg in cfgs.items():
+                t0 = time.perf_counter()
+                CodesignEngine(cfg).run(layers)
+                times[strat].append(time.perf_counter() - t0)
+        base_s, spec_s = min(times["probe_fanout"]), min(times["speculative"])
+        out[f"{backend}_probe_fanout_s"] = round(base_s, 3)
+        out[f"{backend}_speculative_s"] = round(spec_s, 3)
+        out[f"{backend}_speedup"] = round(base_s / spec_s, 2)
+        out[f"{backend}_hit_rate"] = round(
+            stats["speculative"]["spec_hit_rate"], 3)
+        out[f"{backend}_spec_evaluated"] = stats["speculative"]["spec_evaluated"]
+    return out
+
+
 def run(n_hw: int = 12, n_sw: int = 60, seeds=(0,), quiet: bool = False,
         collect: dict | None = None, backend: str | None = None,
         gp_refit_every: int = 1, config: CodesignConfig | None = None):
@@ -331,7 +385,7 @@ def _finite(x: float):
 
 
 def print_speedups(eng: dict, e2e: dict, lb: dict | None = None,
-                   pf: dict | None = None) -> None:
+                   pf: dict | None = None, spec: dict | None = None) -> None:
     """CSV lines for the engine/e2e speedup records (shared with run.py)."""
     for name, r in eng["layers"].items():
         print(f"engine,{name},scalar={r['scalar_s']}s,"
@@ -358,6 +412,16 @@ def print_speedups(eng: dict, e2e: dict, lb: dict | None = None,
               f"jax_base={pf['jax_layer_batched_s']}s,"
               f"jax_fanout={pf['jax_fanout_s']}s,"
               f"jax_speedup={pf['jax_speedup']}x")
+    if spec is not None:
+        print(f"speculative,{spec['model']},"
+              f"numpy_base={spec['numpy_probe_fanout_s']}s,"
+              f"numpy_spec={spec['numpy_speculative_s']}s,"
+              f"numpy_speedup={spec['numpy_speedup']}x,"
+              f"numpy_hit_rate={spec['numpy_hit_rate']},"
+              f"jax_base={spec['jax_probe_fanout_s']}s,"
+              f"jax_spec={spec['jax_speculative_s']}s,"
+              f"jax_speedup={spec['jax_speedup']}x,"
+              f"jax_hit_rate={spec['jax_hit_rate']}")
 
 
 if __name__ == "__main__":
@@ -376,7 +440,7 @@ if __name__ == "__main__":
     args = ap.parse_args()
     if args.speedup:
         print_speedups(engine_speedup(), e2e_speedup(), layer_batch_speedup(),
-                       probe_fanout_speedup())
+                       probe_fanout_speedup(), speculative_speedup())
     elif args.paper:
         run(n_hw=50, n_sw=250, seeds=(0, 1, 2), backend=args.backend,
             gp_refit_every=args.gp_refit_every)

@@ -30,6 +30,9 @@ ratios are as robust as the hot-path ones:
     layer_batch_e2e.jax_speedup      (annotating only, like jax_speedup)
     probe_fanout_e2e.numpy_speedup   (gating)
     probe_fanout_e2e.jax_speedup     (annotating only, like jax_speedup)
+    speculative_e2e.numpy_speedup    (gating; the record also carries the
+                                      speculation cache hit-rate per backend)
+    speculative_e2e.jax_speedup      (annotating only, like jax_speedup)
 
 A missing/invalid previous record is not an error -- first runs and artifact
 expiry just skip the gate with a notice.  Records written before a metric
@@ -120,11 +123,14 @@ def main() -> int:
         ("layer_batch.jax_speedup", None, False),
         ("probe_fanout.numpy_speedup", None, True),
         ("probe_fanout.jax_speedup", None, False),
+        ("speculative.numpy_speedup", None, True),
+        ("speculative.jax_speedup", None, False),
     ):
         if extract is None:
             section, metric = key.split(".", 1)
             section = {"layer_batch": "layer_batch_e2e",
-                       "probe_fanout": "probe_fanout_e2e"}[section]
+                       "probe_fanout": "probe_fanout_e2e",
+                       "speculative": "speculative_e2e"}[section]
             olds = _section_speedups(old, section, metric)
             news = _section_speedups(new, section, metric)
         else:

@@ -79,7 +79,9 @@ def main() -> None:
     lbe = bo_codesign.layer_batch_speedup()
     print("# probe-fanout warmup vs per-probe layer-batched (per backend)")
     pfe = bo_codesign.probe_fanout_speedup()
-    bo_codesign.print_speedups(eng, e2e, lbe, pfe)
+    print("# speculative scored-trial fan-out vs probe_fanout (per backend)")
+    spec = bo_codesign.speculative_speedup()
+    bo_codesign.print_speedups(eng, e2e, lbe, pfe, spec)
 
     print("# Fig. 5b/5c -- surrogate/acquisition + lambda ablations")
     bo_ablation.run(n_trials=250 if args.paper else 80,
@@ -96,6 +98,7 @@ def main() -> None:
         collect["e2e_speedup"] = e2e
         collect["layer_batch_e2e"] = lbe
         collect["probe_fanout_e2e"] = pfe
+        collect["speculative_e2e"] = spec
         collect["backend"] = backend
         collect["paper_budgets"] = bool(args.paper)
         collect["total_s"] = round(total, 1)

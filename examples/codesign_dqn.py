@@ -2,8 +2,13 @@
 40.2% EDP improvement over Eyeriss), on the typed config API.
 
     PYTHONPATH=src python examples/codesign_dqn.py [--paper | --tiny]
-        [--strategy auto|sequential|layer_batched|probe_fanout]
-        [--backend numpy|jax] [--save-config cfg.json]
+        [--strategy auto|sequential|layer_batched|probe_fanout|speculative]
+        [--hw-refit-every N] [--backend numpy|jax] [--save-config cfg.json]
+
+`--strategy speculative` pairs best with `--hw-refit-every 4`: the outer loop
+then consumes one frozen q-batch per refit window and the speculative fan-out
+evaluates each window's batch as one stacked program (cache hit-rate is
+printed from the result record).
 
 `--save-config` writes the exact `CodesignConfig` that ran as JSON; feed it
 back through `python -m benchmarks.run --config cfg.json` (or
@@ -29,7 +34,8 @@ def build_config(args) -> CodesignConfig:
         hw = HWSearchConfig(n_trials=12, pool_size=60)
     return CodesignConfig(
         sw=sw, hw=hw,
-        engine=EngineConfig(backend=args.backend, strategy=args.strategy),
+        engine=EngineConfig(backend=args.backend, strategy=args.strategy,
+                            hw_gp_refit_every=args.hw_refit_every),
         seed=0, verbose=not args.tiny,
     )
 
@@ -41,6 +47,10 @@ def main():
                     help="smoke-test budgets (CI)")
     ap.add_argument("--backend", default=None, choices=BACKENDS)
     ap.add_argument("--strategy", default="auto", choices=STRATEGIES)
+    ap.add_argument("--hw-refit-every", type=int, default=1,
+                    help="outer-loop GP refit stride; >1 batches the outer "
+                         "acquisition into frozen q-batch windows (pairs "
+                         "with --strategy speculative)")
     ap.add_argument("--save-config", default=None, metavar="PATH",
                     help="write the CodesignConfig that ran as JSON")
     args = ap.parse_args()
@@ -67,6 +77,10 @@ def main():
 
     print(f"\nco-designed: model EDP {res.best_model_edp:.3e} "
           f"({(1 - res.best_model_edp / base_total) * 100:.1f}% better than Eyeriss)")
+    if res.stats and res.stats["spec_evaluated"]:
+        print(f"speculation: {res.stats['spec_evaluated']} probes evaluated "
+              f"ahead of time, {res.stats['spec_hits']} consumed "
+              f"(hit rate {res.stats['spec_hit_rate']:.0%})")
     hw = res.best_hw
     print(f"best hardware: PE array {hw.pe_mesh_x}x{hw.pe_mesh_y}, "
           f"LB split I/W/O = {hw.lb_input}/{hw.lb_weight}/{hw.lb_output}, "

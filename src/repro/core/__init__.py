@@ -12,14 +12,14 @@ from repro.core.config import (ACQUISITIONS, BACKENDS, PALLAS_MODES,
                                SWSearchConfig, config_from_legacy_kwargs)
 from repro.core.gp import GP, GPClassifier, GPClassifierStack, GPStack
 from repro.core.acquisition import expected_improvement, lcb, make_acquisition
-from repro.core.bo import BOResult, bo_maximize, bo_maximize_many
-from repro.core.swspace import LayerStackSpace, SoftwareSpace
+from repro.core.bo import BOResult, bo_maximize, bo_maximize_many, score_topk
+from repro.core.swspace import LayerStackSpace, SoftwareSpace, fanout_spaces
 from repro.core.hwspace import HardwareSpace
 from repro.core.nested import (PROBE_STRATEGIES, CoDesignResult,
                                CodesignEngine, LayerBatchedProbes,
                                ProbeFanoutProbes, ProbeStrategy,
-                               SequentialProbes, codesign, optimize_software,
-                               optimize_software_fanout,
+                               SequentialProbes, SpeculativeProbes, codesign,
+                               optimize_software, optimize_software_fanout,
                                optimize_software_many)
 from repro.core.baselines import random_search, relax_round_bo, tvm_style_search
 from repro.core.trees import GradientBoostedTrees, RandomForestSurrogate
@@ -46,8 +46,10 @@ __all__ = [
     "BOResult",
     "bo_maximize",
     "bo_maximize_many",
+    "score_topk",
     "LayerStackSpace",
     "SoftwareSpace",
+    "fanout_spaces",
     "HardwareSpace",
     "PROBE_STRATEGIES",
     "CoDesignResult",
@@ -56,6 +58,7 @@ __all__ = [
     "ProbeFanoutProbes",
     "ProbeStrategy",
     "SequentialProbes",
+    "SpeculativeProbes",
     "codesign",
     "optimize_software",
     "optimize_software_fanout",

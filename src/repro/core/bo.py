@@ -10,6 +10,16 @@ The loop implements the paper's scheme exactly:
     that satisfy all input constraints, pick the acquisition argmax,
   * evaluate, record, repeat for `n_trials`.
 
+Two pool-construction refinements apply to list-pool spaces (the hardware
+loop): *candidate carry-forward* (`cfg.elite_k` > 0 keeps the previous scored
+trial's best unevaluated candidates in the next trial's pool, so the
+acquisition optimizer has memory across pool resamples) and *frozen refit
+windows* (`gp_refit_every` > 1 reuses one pool per refit window with consumed
+candidates masked out, turning the window into one batched acquisition round
+-- the q-batch semantics of BoTorch/Vizier-style parallel suggestion, and the
+regime where the nested driver's speculative prefetch becomes exact).  Packed
+software (MappingBatch) pools are untouched by both.
+
 Spaces may implement the *batched evaluation protocol* — `supports_batch`
 (truthy), `sample_pool(rng, n)`, `features_batch(pool)`, `evaluate_batch(pool)`
 (see `repro.timeloop.batch`) — in which case warmup draws and the per-trial
@@ -94,6 +104,41 @@ class BOResult:
     n_infeasible: int = 0
 
 
+def score_topk(utility, k: int) -> np.ndarray:
+    """Indices of the k largest utilities in DESCENDING order -- the ranking
+    sibling of `GPStack.score_device`'s fused argmax, used by the speculative
+    outer loop to pick its fan-out candidates.  The sort is stable, so ties
+    rank by pool index and entry 0 is exactly `np.argmax(utility)` -- the
+    candidate the BO trial itself consumes."""
+    utility = np.asarray(utility)
+    k = max(1, min(int(k), len(utility)))
+    return np.argsort(-utility, kind="stable")[:k]
+
+
+def _prefetch_topk(space, pool, utility, k_cap: int | None = None) -> None:
+    """Speculative-prefetch hook: spaces exposing `prefetch_topk_fn` (+ a
+    `prefetch_topk` width > 1) get the trial's pool candidates ranked by
+    acquisition utility, best first, BEFORE the argmax is evaluated.  The
+    nested driver's "speculative" strategy injects it on the hardware space to
+    fan the top-k probes' inner searches out as one stacked multi-run program;
+    entry 0 is the trial's own argmax, the rest are speculation.  Purely an
+    observer: no RNG is consumed and the trial's own selection is untouched,
+    so the BO trajectory is exactly the un-hooked one.
+
+    `k_cap` bounds the width when the loop KNOWS how much speculation can
+    still be consumed -- inside a frozen refit window only the window's
+    remaining trials can select a speculated candidate, so anything wider is
+    guaranteed waste."""
+    fn = getattr(space, "prefetch_topk_fn", None)
+    k = int(getattr(space, "prefetch_topk", 0) or 0)
+    if k_cap is not None:
+        k = min(k, k_cap)
+    if fn is None or k <= 1:
+        return
+    idx = score_topk(utility, k)
+    fn([pool[int(i)] for i in idx])
+
+
 def _resolve_search_config(config, overrides) -> SearchConfig:
     """Normalize (config object, field overrides) to one validated
     `SearchConfig`.  Overrides are the config's own field names
@@ -130,9 +175,37 @@ def bo_maximize(
             )
     n_trials, n_warmup, pool_size = cfg.n_trials, cfg.n_warmup, cfg.pool_size
     acquisition, lam, surrogate = cfg.acquisition, cfg.lam, cfg.surrogate
+    elite_k = getattr(cfg, "elite_k", 0)
     rng = np.random.default_rng(seed)
     acq = make_acquisition(acquisition, lam)
     acq_dev = None
+
+    # Candidate carry-forward (cfg.elite_k): the previous scored trial's top
+    # candidates that were NOT evaluated survive into the next trial's pool,
+    # so the acquisition optimizer has memory across pool resamples.  Only
+    # list pools support appending (the hardware space; packed MappingBatch
+    # pools of the software loop keep elite_k = 0).
+    elites: list = []
+    observed: set = set()
+    # Frozen refit windows: see the comment at the trial loop.
+    can_freeze = gp_refit_every > 1 and bool(
+        getattr(space, "supports_pool_freeze", False))
+
+    def update_elites(pool, utility, i_best) -> None:
+        if not (elite_k and isinstance(pool, list)):
+            return
+        new: list = []
+        winner = pool[i_best]
+        for i in score_topk(utility, elite_k + 1 + len(observed)):
+            p = pool[int(i)]
+            # compare by value, not index: a duplicate of the just-evaluated
+            # winner elsewhere in the pool must not survive as an elite
+            if p == winner or p in observed or p in new:
+                continue
+            new.append(p)
+            if len(new) == elite_k:
+                break
+        elites[:] = new
 
     X_feas: list[np.ndarray] = []
     y_feas: list[float] = []
@@ -152,6 +225,10 @@ def bo_maximize(
     def observe(point, feats=None, outcome=None):
         feats = space.features(point) if feats is None else feats
         value, feasible = space.evaluate(point) if outcome is None else outcome
+        if elite_k or can_freeze:
+            # evaluated points never re-enter as elites, and frozen window
+            # pools mask them out
+            observed.add(point)
         X_all.append(feats)
         feas_all.append(feasible)
         result.points.append(point)
@@ -197,8 +274,23 @@ def bo_maximize(
 
     model = None
     classifier = None
+    # Pool freezing (gp_refit_every > 1 on spaces that opt in through
+    # `supports_pool_freeze`, e.g. the hardware space): within one refit
+    # window the posterior is fixed, so the window IS one batched acquisition
+    # round -- the pool sampled at the refit trial is reused (frozen) by the
+    # window's remaining trials with already-consumed candidates masked out,
+    # making the window consume the posterior's top candidates one per trial
+    # (the q-batch semantics of BoTorch/Vizier-style parallel suggestion,
+    # and what makes speculative prefetches exact for rank-stable
+    # acquisitions like LCB).  Spaces without the opt-in (all software
+    # spaces; `bo_maximize_many`'s lockstep contract covers them) keep
+    # per-trial resampling, and only list pools -- hashable candidate
+    # identity -- can freeze.
+    window_pool = None
+    window_feats = None
     for t in range(len(result.history), n_trials):
-        if len(y_feas) >= 2 and (model is None or t % gp_refit_every == 0):
+        refit = len(y_feas) >= 2 and (model is None or t % gp_refit_every == 0)
+        if refit:
             Xf = np.stack(X_feas)
             yf = np.asarray(y_feas)
             if surrogate == "gp_linear":
@@ -213,6 +305,7 @@ def bo_maximize(
                 classifier = GPClassifier().fit(np.stack(X_all), np.asarray(feas_all))
             else:
                 classifier = None
+            window_pool = window_feats = None  # new posterior -> new pool
 
         if model is None:  # not enough feasible data yet -> keep sampling
             observe(sample_valid_pool(1)[0] if use_batch else sample_valid())
@@ -233,6 +326,7 @@ def bo_maximize(
             utility = acq_dev(mu, var, result.best_value)
             if classifier is not None:
                 utility = utility * classifier.prob_feasible_device(feats_dev)
+            _prefetch_topk(space, pool, utility)
             i_best = int(jnp.argmax(utility))
             observe(pool[i_best],
                     feats=np.asarray(feats_dev[i_best], dtype=np.float64))
@@ -240,12 +334,26 @@ def bo_maximize(
                 callback(t, result)
             continue
 
-        if use_batch:
+        frozen = window_pool is not None
+        if frozen and all(p in observed for p in window_pool):
+            # The window outlived its pool (stride > unobserved candidates):
+            # resample instead of re-evaluating masked-out points forever.
+            window_pool = window_feats = None
+            frozen = False
+        if frozen:
+            pool, feats = window_pool, window_feats
+        elif use_batch:
             pool = sample_valid_pool(pool_size)
+            if elites and isinstance(pool, list):
+                pool = pool + elites
             feats = space.features_batch(pool)
         else:
             pool = [sample_valid() for _ in range(pool_size)]
+            if elites:
+                pool = pool + elites
             feats = np.stack([space.features(p) for p in pool])
+        if can_freeze and not frozen and isinstance(pool, list):
+            window_pool, window_feats = pool, feats
         mu, var = model.posterior(feats)
         utility = acq(mu, var, result.best_value)
         if classifier is not None:
@@ -253,7 +361,20 @@ def bo_maximize(
             # boundary explicit so the acquisition math never silently
             # promotes to device arrays.
             utility = utility * np.asarray(classifier.prob_feasible(feats))
+        if frozen:
+            # Already-consumed candidates leave the frozen window pool.
+            utility = np.where([p in observed for p in pool], -np.inf, utility)
+        if window_pool is not None:
+            # Windowed mode: only the window's remaining trials (this one
+            # included) can consume a speculated candidate -- wider
+            # speculation is guaranteed waste.
+            next_refit = (t // gp_refit_every + 1) * gp_refit_every
+            _prefetch_topk(space, pool, utility,
+                           k_cap=min(next_refit, n_trials) - t)
+        else:
+            _prefetch_topk(space, pool, utility)
         i_best = int(np.argmax(utility))
+        update_elites(pool, utility, i_best)
         observe(pool[i_best], feats=feats[i_best])
         if callback:
             callback(t, result)

@@ -33,7 +33,8 @@ from typing import Any
 BACKENDS = ("numpy", "jax")
 SURROGATES = ("gp_linear", "gp_se", "rf")
 ACQUISITIONS = ("lcb", "ei")
-STRATEGIES = ("auto", "sequential", "layer_batched", "probe_fanout")
+STRATEGIES = ("auto", "sequential", "layer_batched", "probe_fanout",
+              "speculative")
 PALLAS_MODES = ("jnp", "pallas", "interpret")
 
 
@@ -55,7 +56,17 @@ def _validate_positive_int(field: str, value, minimum: int = 1) -> None:
 
 @dataclasses.dataclass(frozen=True)
 class SearchConfig:
-    """One constrained-BO loop: budget, acquisition, surrogate (paper §3)."""
+    """One constrained-BO loop: budget, acquisition, surrogate (paper §3).
+
+    elite_k: candidate carry-forward width.  When > 0, each scored trial's
+    acquisition pool is the fresh `pool_size` draw PLUS the previous scored
+    trial's top-`elite_k` not-yet-evaluated candidates, so strong candidates
+    survive pool resampling (the persistent-candidate trick of large-scale BO
+    systems, cf. BoTorch/Vizier in PAPERS.md) and the acquisition argmax over
+    the superset pool is a strictly better acquisition optimization.  It is
+    also what gives the speculative outer loop its cache hits: a speculated
+    candidate can actually be selected later instead of vanishing with its
+    pool.  Applies to list-pool spaces (the hardware loop); 0 disables."""
 
     n_trials: int = 250
     n_warmup: int = 30
@@ -63,6 +74,7 @@ class SearchConfig:
     acquisition: str = "lcb"
     lam: float = 1.0
     surrogate: str = "gp_linear"
+    elite_k: int = 0
 
     def __post_init__(self) -> None:
         validate_choice("acquisition", self.acquisition, ACQUISITIONS)
@@ -70,6 +82,7 @@ class SearchConfig:
         _validate_positive_int("n_trials", self.n_trials)
         _validate_positive_int("n_warmup", self.n_warmup, minimum=0)
         _validate_positive_int("pool_size", self.pool_size)
+        _validate_positive_int("elite_k", self.elite_k, minimum=0)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -80,15 +93,23 @@ class SWSearchConfig(SearchConfig):
 @dataclasses.dataclass(frozen=True)
 class HWSearchConfig(SearchConfig):
     """Outer hardware search (50 trials / 5 warmup in the paper) plus the
-    PE budget that parameterizes the hardware space itself."""
+    PE budget that parameterizes the hardware space itself.
+
+    spec_k: fan-out width of the `strategy="speculative"` outer loop -- at each
+    scored trial the top-k acquisition candidates are evaluated as one stacked
+    multi-run program (the argmax feeds the BO history; the k-1 speculative
+    results prefill the (hw, layer) cache).  Ignored by other strategies."""
 
     n_trials: int = 50
     n_warmup: int = 5
     num_pes: int = 168
+    spec_k: int = 4
+    elite_k: int = 4  # carry-forward on by default for the outer loop
 
     def __post_init__(self) -> None:
         super().__post_init__()
         _validate_positive_int("num_pes", self.num_pes)
+        _validate_positive_int("spec_k", self.spec_k)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -102,8 +123,21 @@ class EngineConfig:
                       "probe_fanout"  layer_batched + the outer warmup's H
                                       independent probes fanned out as ONE
                                       H*L-run stacked `bo_maximize_many`
+                      "speculative"   probe_fanout + per scored outer trial the
+                                      top-`hw.spec_k` acquisition candidates
+                                      fan out as one k*L-run stacked program
+                                      (argmax consumed, the rest cached)
                       "auto"          layer_batched on jax, sequential on numpy
     gp_refit_every  inner-loop surrogate refit stride (amortization)
+    hw_gp_refit_every
+                    OUTER-loop surrogate refit stride.  Trials inside one
+                    refit window score their pools with the same posterior,
+                    so with candidate carry-forward (`hw.elite_k`) the top-k
+                    of a window's first trial is exactly the q-batch the
+                    following trials select from -- the regime where
+                    `strategy="speculative"`'s prefetch turns into cache hits
+                    (cf. Vizier's parallel suggestions from one posterior).
+                    1 (default) refits every trial like the paper.
     batched         expose the batched evaluation protocol to the BO loop
     use_cache       share the (hw, layer) -> best-mapping cache across probes
     pallas_mode     inner-kernel dispatch: "jnp" | "pallas" | "interpret" |
@@ -113,6 +147,7 @@ class EngineConfig:
     backend: str | None = None
     strategy: str = "auto"
     gp_refit_every: int = 1
+    hw_gp_refit_every: int = 1
     batched: bool = True
     use_cache: bool = True
     pallas_mode: str | None = None
@@ -123,10 +158,12 @@ class EngineConfig:
         validate_choice("pallas_mode", self.pallas_mode, PALLAS_MODES,
                         optional=True)
         _validate_positive_int("gp_refit_every", self.gp_refit_every)
-        if self.strategy == "probe_fanout" and not self.use_cache:
+        _validate_positive_int("hw_gp_refit_every", self.hw_gp_refit_every)
+        if self.strategy in ("probe_fanout", "speculative") and not self.use_cache:
             raise ValueError(
-                "strategy='probe_fanout' requires use_cache=True: the fan-out "
-                "prefills the (hw, layer) cache that probe evaluation reads")
+                f"strategy={self.strategy!r} requires use_cache=True: the "
+                "fan-out prefills the (hw, layer) cache that probe evaluation "
+                "reads")
 
     def resolve_backend(self) -> str:
         from repro.core.swspace import default_backend

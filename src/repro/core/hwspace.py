@@ -54,6 +54,21 @@ class HardwareSpace:
     # strategy injects it to run ALL warmup probes' inner software searches as
     # one stacked multi-run fan-out; the loop below then reads cache hits.
     prefetch_fn: Callable[[list[HardwareConfig]], None] | None = None
+    # prefetch_topk_fn(cands): optional per-scored-trial hook -- the BO loop
+    # hands it the pool's top-`prefetch_topk` candidates ranked by acquisition
+    # utility (best first; entry 0 is the trial's own argmax) before the argmax
+    # is evaluated.  The nested driver's speculative strategy injects it to fan
+    # the k probes' inner searches out as ONE stacked multi-run program: the
+    # argmax probe's layers become cache hits for this trial's evaluation, the
+    # k-1 speculative probes' for whichever later trial selects them.
+    prefetch_topk_fn: Callable[[list[HardwareConfig]], None] | None = None
+    prefetch_topk: int = 0
+    # Opt in to the BO loop's frozen refit windows (gp_refit_every > 1 reuses
+    # one pool per refit window with consumed candidates masked -- batched
+    # q-batch acquisition).  An outer-loop semantic: spaces without this stay
+    # on per-trial resampling, and the lockstep multi-run engine (which the
+    # hardware loop never uses) keeps its sequential-parity contract.
+    supports_pool_freeze: bool = True
     name: str = "hardware"
     # Pool sampling + featurization take the packed-array protocol; evaluation
     # itself is the nested inner search and stays scalar (see module

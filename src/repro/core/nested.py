@@ -22,7 +22,20 @@ The search is configured by one typed, serializable `CodesignConfig`
                    as its probe's sequential search would be, so results are
                    identical; on the JAX backend every BO round is a single
                    (H*L*B,)-row fused dispatch)
+  "speculative"    probe_fanout, PLUS speculative fan-out of the scored outer
+                   trials: each trial's top-`hw.spec_k` acquisition candidates
+                   are evaluated as ONE k*L-run stacked `bo_maximize_many`
+                   (the argmax feeds the outer history exactly as the
+                   sequential path would; the k-1 speculative results prefill
+                   the (hw, layer) cache so later trials that select them are
+                   free -- hit-rate reported in `CoDesignResult.stats`)
   "auto"           layer_batched when the backend is "jax", else sequential
+
+Probe seeds are *content-derived* (`CodesignEngine.probe_seed`: a stable hash
+of the run seed and the probe's fields), so a probe's inner search is the same
+no matter when -- or how speculatively -- it is evaluated; that is what makes
+every strategy above bit-identical to "sequential" (within the stacked GP's
+Cholesky regime, see tests/test_speculative.py).
 
 `codesign(**legacy_kwargs)` remains as a thin deprecation shim with pinned
 result parity (tests/test_config_api.py).
@@ -31,6 +44,7 @@ result parity (tests/test_config_api.py).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import warnings
 from typing import Sequence
 
@@ -41,7 +55,7 @@ from repro.core.bo import (BOResult, InfeasibleSpace, _resolve_search_config,
 from repro.core.config import (CodesignConfig, EngineConfig, SWSearchConfig,
                                config_from_legacy_kwargs)
 from repro.core.hwspace import HardwareSpace
-from repro.core.swspace import SoftwareSpace
+from repro.core.swspace import SoftwareSpace, fanout_spaces
 from repro.timeloop.arch import HardwareConfig
 from repro.timeloop.mapping import Mapping
 from repro.timeloop.model import evaluate
@@ -55,6 +69,10 @@ class CoDesignResult:
     best_model_edp: float            # sum over layers, pJ*cycles
     hw_result: BOResult
     layer_edps: dict[str, float]
+    # Engine accounting for the run: speculative probes evaluated / consumed
+    # as cache hits and the resulting hit rate (all zero for non-speculative
+    # strategies).
+    stats: dict | None = None
 
 
 _SEARCH_FIELDS = {f.name for f in dataclasses.fields(SWSearchConfig)}
@@ -147,21 +165,34 @@ def optimize_software_fanout(
     *,
     seeds: Sequence[int],
     engine: EngineConfig | None = None,
+    pad_to: int | None = None,
 ) -> list[BOResult]:
     """Probe-fanout twin of `optimize_software_many`: one stacked multi-run
     search over (hardware, layer) pairs that may span *different* hardware
     probes, each run seeded individually (`seeds[i]`, exactly as the
     sequential per-probe calls would be).  On the JAX backend every BO round
     of all H*L runs is a single (H*L*B,)-row fused device program -- the
-    hardware vector rides per row, like the layer vector."""
+    hardware vector rides per row, like the layer vector.
+
+    `pad_to` pads the stack to a fixed run count with copies of run 0 on the
+    JAX backend (see `swspace.fanout_spaces`): the speculative outer loop's
+    per-trial item count varies as cached probes drop out, and a fixed width
+    keeps one compiled per-round program across trials.  Only the first
+    `len(items)` results are returned."""
+    if len(items) != len(seeds):
+        raise ValueError(f"{len(seeds)} seeds for {len(items)} items")
     cfg, eng = _split_config(config, engine, {})
-    spaces = [_software_space(hw, layer, eng) for hw, layer in items]
+    spaces = fanout_spaces(items, batched=eng.batched, backend=eng.backend,
+                           pallas_mode=eng.pallas_mode, pad_to=pad_to)
+    seeds = list(seeds)
+    if len(spaces) > len(items):  # padded runs replay run 0's search
+        seeds += [seeds[0]] * (len(spaces) - len(items))
     return bo_maximize_many(
         spaces, cfg,
         noisy=False,
-        seed=list(seeds),
+        seed=seeds,
         gp_refit_every=eng.gp_refit_every,
-    )
+    )[:len(items)]
 
 
 # --- probe-evaluation strategies -------------------------------------------------
@@ -192,6 +223,12 @@ class ProbeStrategy:
                  pool: Sequence[HardwareConfig]) -> None:
         """Called once with the outer warmup pool before its probes are
         evaluated; default: nothing (probes evaluate one at a time)."""
+
+    def prefetch_topk(self, engine: "CodesignEngine",
+                      cands: Sequence[HardwareConfig]) -> None:
+        """Called per scored outer trial with the acquisition pool's top-k
+        candidates, best first (entry 0 is the argmax the trial consumes);
+        default: nothing (the speculative strategy overrides this)."""
 
 
 class SequentialProbes(ProbeStrategy):
@@ -236,27 +273,40 @@ class LayerBatchedProbes(ProbeStrategy):
 class ProbeFanoutProbes(LayerBatchedProbes):
     """Layer-batched per-probe evaluation PLUS warmup fan-out: the outer
     loop's H warmup probes are independent, so their H*L inner searches run as
-    ONE stacked `bo_maximize_many` (per-run seeds preserve each probe's
-    sequential seeding; duplicate probes keep their first occurrence's seed,
-    exactly as the cache would serve them sequentially).  Requires
-    `use_cache=True` (validated at `EngineConfig` construction)."""
+    ONE stacked `bo_maximize_many` (content-derived per-run seeds --
+    `CodesignEngine.probe_seed` -- make each run exactly the search eval_hw
+    would launch for its probe; duplicate probes are searched once, exactly as
+    the cache would serve them sequentially).  Requires `use_cache=True`
+    (validated at `EngineConfig` construction)."""
 
     name = "probe_fanout"
 
-    def prefetch(self, engine, pool):
-        base = engine._inner_seed
+    def _pending_items(self, engine, cands, *, mark_speculated=False):
+        """(hw, layer) work items still uncached for `cands` (deduplicated,
+        pool order) with their content-derived seeds; `mark_speculated`
+        additionally reports which non-argmax probes contributed items (the
+        speculative-consumption accounting -- entry 0 of `cands` is the work
+        its trial consumes itself)."""
         items: list[tuple[HardwareConfig, ConvLayer]] = []
         seeds: list[int] = []
+        speculated: list[HardwareConfig] = []
         seen: set[HardwareConfig] = set()
-        for i, hw in enumerate(pool):
+        for rank, hw in enumerate(cands):
             if hw in seen:
                 continue  # later duplicate -> cache hit at evaluation time
             seen.add(hw)
-            for layer in dict.fromkeys(engine._layers):
-                if (hw, layer) in engine.cache:
-                    continue
-                items.append((hw, layer))
-                seeds.append(base + i + 1)  # the seed eval_hw will hold then
+            todo = [(hw, layer) for layer in dict.fromkeys(engine._layers)
+                    if (hw, layer) not in engine.cache]
+            if not todo:
+                continue
+            if mark_speculated and rank > 0:
+                speculated.append(hw)
+            items.extend(todo)
+            seeds.extend([engine.probe_seed(hw)] * len(todo))
+        return items, seeds, speculated
+
+    def prefetch(self, engine, pool):
+        items, seeds, _ = self._pending_items(engine, pool)
         if not items:
             return
         rs = optimize_software_fanout(items, engine.config.sw, seeds=seeds,
@@ -265,9 +315,57 @@ class ProbeFanoutProbes(LayerBatchedProbes):
             engine.cache[(hw, layer)] = _cache_entry(hw, layer, r)
 
 
+class SpeculativeProbes(ProbeFanoutProbes):
+    """Warmup fan-out (inherited) PLUS speculative scored trials: the outer BO
+    loop hands `prefetch_topk` each trial pool's top-`hw.spec_k` acquisition
+    candidates (best first), and ALL their pending (hw, layer) searches run as
+    ONE stacked k*L-run `bo_maximize_many`.  Entry 0 is the argmax the trial
+    itself consumes -- its searches are the trial's own work, just fanned;
+    entries 1..k-1 are speculation whose results prefill the cache for
+    whichever later trial selects them (hit-rate in `CodesignEngine.stats`).
+
+    Because probe seeds are content-derived, a speculative fill is
+    bit-identical to the search the sequential path would run whenever it
+    first evaluates that probe, so speculation can never change what the
+    outer loop finds -- only when the inner-search work happens (parity
+    pinned in tests/test_speculative.py).  Requires `use_cache=True`
+    (validated at `EngineConfig` construction)."""
+
+    name = "speculative"
+
+    def prefetch_topk(self, engine, cands):
+        items, seeds, speculated = self._pending_items(
+            engine, cands, mark_speculated=True)
+        if not items:
+            return
+        n_layers = len(dict.fromkeys(engine._layers))
+        rs = optimize_software_fanout(
+            items, engine.config.sw, seeds=seeds, engine=engine.config.engine,
+            # Bucketed fan-out width on jax: pad the stack to a whole number
+            # of probes so the per-round fused program compiles for at most
+            # spec_k distinct run counts as cached probes drop out of later
+            # trials' top-k, while padding (real redundant runs -- lax.map GP
+            # slices are NOT free on CPU) stays under one probe's worth.
+            pad_to=-(-len(items) // n_layers) * n_layers)
+        for (hw, layer), r in zip(items, rs):
+            engine.cache[(hw, layer)] = _cache_entry(hw, layer, r)
+        engine.stats["spec_evaluated"] += len(speculated)
+        engine._speculated.update(speculated)
+
+    def evaluate_probe(self, engine, hw, seed):
+        if hw in engine._speculated:
+            # First consumption of a speculative fill: the probe the outer
+            # loop selected was evaluated ahead of time -> whole inner search
+            # skipped (all its layers are cache hits below).
+            engine._speculated.discard(hw)
+            engine.stats["spec_hits"] += 1
+        super().evaluate_probe(engine, hw, seed)
+
+
 PROBE_STRATEGIES: dict[str, type[ProbeStrategy]] = {
     cls.name: cls
-    for cls in (SequentialProbes, LayerBatchedProbes, ProbeFanoutProbes)
+    for cls in (SequentialProbes, LayerBatchedProbes, ProbeFanoutProbes,
+                SpeculativeProbes)
 }
 
 
@@ -286,10 +384,16 @@ class CodesignEngine:
         The inner search is stochastic, so caching also makes repeated probes
         of one hardware point consistent.  The cache is shared by all probe
         strategies (same keys, same values) and persists across `run` calls.
-      * the inner-seed stream: probe i of a run gets seed*7919 + i + 1, the
-        same stream every strategy reproduces (fan-out included).
+      * the probe-seed derivation: a probe's inner searches are seeded by
+        `probe_seed(hw)` -- a stable content hash of (config.seed, the
+        probe's fields) -- so the seed does not depend on WHEN the probe is
+        evaluated.  That makes evaluation order a free variable: warmup
+        fan-out, speculative prefetch, and the plain sequential walk all run
+        the exact same search for any given probe.
       * the probe-evaluation strategy, resolved from
-        `config.engine.strategy` against `PROBE_STRATEGIES`.
+        `config.engine.strategy` against `PROBE_STRATEGIES`, and the
+        speculative accounting (`stats`: probes evaluated speculatively,
+        speculative cache hits; reset per `run`).
     """
 
     def __init__(self, config: CodesignConfig | None = None):
@@ -300,17 +404,28 @@ class CodesignEngine:
         self.cache: dict[tuple[HardwareConfig, ConvLayer],
                          tuple[Mapping | None, float]] = {}
         self._layers: list[ConvLayer] = []
-        self._inner_seed = 0
+        self.stats: dict[str, int] = {"spec_evaluated": 0, "spec_hits": 0}
+        self._speculated: set[HardwareConfig] = set()
+
+    def probe_seed(self, hw: HardwareConfig) -> int:
+        """Content-derived inner-search seed for one hardware probe: a stable
+        (process- and platform-independent) hash of the run seed and the
+        probe's field values.  Every strategy seeds a probe's inner searches
+        through this, which is what lets speculative/fanned-out evaluation
+        reproduce the sequential path bit-for-bit."""
+        data = repr((self.config.seed, dataclasses.astuple(hw))).encode()
+        return int.from_bytes(
+            hashlib.blake2s(data, digest_size=8).digest(), "big")
 
     def run(self, layers: Sequence[ConvLayer]) -> CoDesignResult:
         cfg = self.config
         self._layers = list(layers)
-        self._inner_seed = cfg.seed * 7919
+        self.stats = {"spec_evaluated": 0, "spec_hits": 0}
+        self._speculated = set()
         best = {"edp": np.inf, "hw": None, "maps": None, "per_layer": None}
 
         def eval_hw(hw: HardwareConfig):
-            self._inner_seed += 1
-            self.strategy.evaluate_probe(self, hw, self._inner_seed)
+            self.strategy.evaluate_probe(self, hw, self.probe_seed(hw))
             total_edp = 0.0
             maps: dict[str, Mapping] = {}
             per_layer: dict[str, float] = {}
@@ -330,22 +445,33 @@ class CodesignEngine:
                       f"-> model EDP {total_edp:.3e}")
             return -float(np.log10(total_edp)), True
 
+        spec_k = cfg.hw.spec_k if self.strategy_name == "speculative" else 0
         space = HardwareSpace(
             num_pes=cfg.hw.num_pes,
             evaluate_fn=eval_hw,
             prefetch_fn=lambda pool: self.strategy.prefetch(self, pool),
+            prefetch_topk_fn=(
+                (lambda cands: self.strategy.prefetch_topk(self, cands))
+                if spec_k > 1 else None),
+            prefetch_topk=spec_k,
         )
         hw_result = bo_maximize(
             space, cfg.hw,
             noisy=True,  # inner search stochasticity (paper §4.2)
             seed=cfg.seed,
+            gp_refit_every=cfg.engine.hw_gp_refit_every,
         )
+        stats = dict(self.stats)
+        stats["spec_hit_rate"] = (
+            stats["spec_hits"] / stats["spec_evaluated"]
+            if stats["spec_evaluated"] else 0.0)
         return CoDesignResult(
             best_hw=best["hw"],
             best_mappings=best["maps"],
             best_model_edp=best["edp"],
             hw_result=hw_result,
             layer_edps=best["per_layer"],
+            stats=stats,
         )
 
 

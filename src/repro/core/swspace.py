@@ -178,6 +178,30 @@ class SoftwareSpace:
         return self._forward_jax(pool)["features"]
 
 
+def fanout_spaces(items, *, batched: bool = True, backend: str | None = None,
+                  pallas_mode: str | None = None,
+                  pad_to: int | None = None) -> list[SoftwareSpace]:
+    """Pack (hardware, layer) work items into the `SoftwareSpace` runs of one
+    stacked multi-run fan-out (`bo_maximize_many` stacks them through
+    `LayerStackSpace`; the hardware vector rides per row).
+
+    `pad_to`: on the JAX backend the fused per-round program is compiled for
+    the stack's run count, and the speculative outer loop's count varies per
+    trial (already-cached probes drop out) -- padding the stack to a fixed
+    width with copies of run 0 keeps ONE compiled program across trials.
+    Padded runs are real but redundant searches whose vectorized rows are
+    nearly free on-device; callers slice results back to `len(items)`.  On
+    NumPy every run costs real host work, so no padding is applied there."""
+    spaces = [SoftwareSpace(hw, layer, batched=batched, backend=backend,
+                            pallas_mode=pallas_mode)
+              for hw, layer in items]
+    if (pad_to is not None and spaces and spaces[0].backend == "jax"
+            and len(spaces) < pad_to):
+        spaces += [dataclasses.replace(spaces[0])
+                   for _ in range(pad_to - len(spaces))]
+    return spaces
+
+
 @dataclasses.dataclass
 class LayerStackSpace:
     """L `SoftwareSpace` runs advanced as one stacked batch -- the packing

@@ -1,0 +1,76 @@
+"""The dedicated guard for the hypothesis-based property modules, plus shared
+strategies for the config API.
+
+Import this FIRST in every property-test module:
+
+    from hypothesis_support import given, settings, st
+
+The container CI image does not ship hypothesis (only the GitHub CI install
+does, via requirements.txt); `pytest.importorskip` at import time raises
+pytest's Skipped, so any module importing this one is skipped whole -- tier-1
+stays green wherever hypothesis is absent, without each module repeating the
+guard dance.  Not named test_*, so pytest never collects it directly.
+"""
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import (ACQUISITIONS, BACKENDS, PALLAS_MODES,  # noqa: E402
+                        STRATEGIES, SURROGATES)
+
+# --- CodesignConfig strategies ----------------------------------------------------
+# Valid-by-construction section dicts (the from_dict surface): every enumerated
+# string from its real choice tuple, every bound respected -- so round-trip
+# properties never trip construction-time validation.
+
+search_fields = dict(
+    n_trials=st.integers(1, 400),
+    n_warmup=st.integers(0, 60),
+    pool_size=st.integers(1, 200),
+    acquisition=st.sampled_from(ACQUISITIONS),
+    lam=st.floats(0.0, 8.0, allow_nan=False, allow_infinity=False),
+    surrogate=st.sampled_from(SURROGATES),
+    elite_k=st.integers(0, 8),
+)
+
+sw_sections = st.fixed_dictionaries({}, optional=search_fields)
+
+hw_sections = st.fixed_dictionaries(
+    {},
+    optional=dict(search_fields,
+                  num_pes=st.sampled_from([64, 128, 168, 256]),
+                  spec_k=st.integers(1, 8)),
+)
+
+engine_sections = st.fixed_dictionaries(
+    {},
+    optional=dict(
+        backend=st.sampled_from([None, *BACKENDS]),
+        # probe_fanout/speculative require use_cache=True (validated at
+        # construction); the valid-config strategy respects that coupling.
+        strategy=st.sampled_from([s for s in STRATEGIES
+                                  if s not in ("probe_fanout", "speculative")]),
+        gp_refit_every=st.integers(1, 8),
+        hw_gp_refit_every=st.integers(1, 8),
+        batched=st.booleans(),
+        use_cache=st.booleans(),
+        pallas_mode=st.sampled_from([None, *PALLAS_MODES]),
+    ),
+)
+
+config_dicts = st.fixed_dictionaries(
+    {},
+    optional=dict(
+        sw=sw_sections,
+        hw=hw_sections,
+        engine=engine_sections,
+        seed=st.integers(0, 2**31 - 1),
+        verbose=st.booleans(),
+    ),
+)
+
+# Strings that are NOT one of the given choices (the rejection property).
+def not_in(choices):
+    return st.text(min_size=1, max_size=12).filter(lambda s: s not in choices)

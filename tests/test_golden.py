@@ -1,0 +1,90 @@
+"""Seeded golden end-to-end regression tests (ISSUE 5): tiny-budget `codesign`
+runs per seed workload, pinned against checked-in goldens, so cross-PR result
+drift fails tier-1 instead of surfacing only through the benchmark gate.
+
+Each golden is (a) a content hash of the winning design -- the best hardware
+config and every layer's best mapping -- and (b) the best model log10(EDP)
+rounded to 6 decimals.  The search is forced onto backend="numpy" so both CI
+backends (REPRO_BACKEND=numpy and =jax) run the identical program; the GP
+surrogate still runs through JAX, so a jax version bump that flips an argmax
+would surface here -- that is drift worth seeing, and regenerating is one
+command:
+
+    PYTHONPATH=src python tests/test_golden.py --regen
+
+which rewrites tests/goldens/codesign.json (commit the diff ONLY when the
+change is an intended search-behavior change).
+"""
+
+import dataclasses
+import hashlib
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import (CodesignConfig, CodesignEngine, EngineConfig,
+                        HWSearchConfig, SWSearchConfig)
+from repro.timeloop import MODEL_LAYERS
+
+GOLDEN_PATH = Path(__file__).parent / "goldens" / "codesign.json"
+MODELS = ("resnet", "dqn", "mlp", "transformer")
+
+
+def _config(model: str) -> CodesignConfig:
+    """Tiny deterministic budgets: seconds per workload, but a real nested
+    search (warmup + scored trials, surrogate + acquisition + cache)."""
+    return CodesignConfig(
+        sw=SWSearchConfig(n_trials=10, n_warmup=5, pool_size=15),
+        hw=HWSearchConfig(n_trials=3, n_warmup=2, pool_size=12,
+                          num_pes=256 if model == "transformer" else 168),
+        engine=EngineConfig(backend="numpy"),  # identical under both CI jobs
+        seed=0,
+    )
+
+
+def _canonical(result) -> str:
+    """Deterministic text form of the winning design: hardware fields plus
+    each layer's mapping fields, all plain ints/floats/strings."""
+    hw = dataclasses.astuple(result.best_hw)
+    maps = sorted(
+        (name, dataclasses.astuple(m)) for name, m in result.best_mappings.items())
+    return repr((hw, maps))
+
+
+def run_one(model: str) -> dict:
+    result = CodesignEngine(_config(model)).run(MODEL_LAYERS[model])
+    return {
+        "design_sha256": hashlib.sha256(_canonical(result).encode()).hexdigest(),
+        "best_log10_edp": round(float(np.log10(result.best_model_edp)), 6),
+        "n_trials": len(result.hw_result.history),
+    }
+
+
+@pytest.mark.e2e
+@pytest.mark.parametrize("model", MODELS)
+def test_codesign_matches_golden(model):
+    goldens = json.loads(GOLDEN_PATH.read_text())
+    got = run_one(model)
+    want = goldens[model]
+    assert got == want, (
+        f"golden e2e drift on {model!r}:\n  got  {got}\n  want {want}\n"
+        "If this PR intentionally changes search behavior, regenerate with\n"
+        "  PYTHONPATH=src python tests/test_golden.py --regen\n"
+        "and commit the goldens diff; otherwise this is a regression.")
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--regen", action="store_true",
+                    help="rewrite tests/goldens/codesign.json")
+    args = ap.parse_args()
+    records = {m: run_one(m) for m in MODELS}
+    print(json.dumps(records, indent=2))
+    if args.regen:
+        GOLDEN_PATH.parent.mkdir(parents=True, exist_ok=True)
+        GOLDEN_PATH.write_text(json.dumps(records, indent=2, sort_keys=True) + "\n")
+        print(f"wrote {GOLDEN_PATH}")

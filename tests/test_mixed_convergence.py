@@ -1,0 +1,168 @@
+"""`bo_maximize_many` early-stop masks at MIXED convergence (ISSUE 5): some
+runs stop early (their space proves empirically unsampleable) while others
+continue.  The lockstep engine must reproduce the per-run sequential
+`bo_maximize` calls run-for-run through every mixed state: a run dying during
+warmup, right after warmup, mid-loop with a fitted surrogate, and runs that
+never die -- with and without unknown-constraint (classifier) observations,
+for both acquisitions and refit strides.
+
+The spaces here are tiny host-side toys with a scripted sampling budget, so
+the lockstep loop takes its generic (non-`LayerStackSpace`) path and every
+RNG draw, refit round, and kill decision is exercised directly.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import SWSearchConfig, bo_maximize, bo_maximize_many
+from repro.core.bo import BOResult, InfeasibleSpace
+
+
+class ToySpace:
+    """1-D batched-protocol space with a scripted sampling budget.
+
+    After `die_after` total sampled candidates, `sample_pool` returns None --
+    the space looks empirically empty from then on, which is exactly the
+    mid-search state that trips a lockstep run's early-stop mask.
+    `infeasible_below` makes part of the range an unknown-constraint violation
+    so the feasibility classifier engages.
+    """
+
+    supports_batch = True
+    feature_dim = 2
+    name = "toy"
+
+    def __init__(self, offset: float = 0.0, die_after: int | None = None,
+                 infeasible_below: float | None = None):
+        self.offset = offset
+        self.die_after = die_after
+        self.infeasible_below = infeasible_below
+        self.drawn = 0
+
+    def sample(self, rng):
+        return float(rng.uniform(0.0, 1.0))
+
+    def is_valid(self, p) -> bool:
+        return True
+
+    def features(self, p) -> np.ndarray:
+        return np.array([p, (p + self.offset) ** 2], dtype=np.float64)
+
+    def evaluate(self, p):
+        if self.infeasible_below is not None and p < self.infeasible_below:
+            return None, False
+        return float(np.sin(3.0 * (p + self.offset)) + p), True
+
+    # --- batched evaluation protocol ---------------------------------------------
+
+    def sample_pool(self, rng, n: int):
+        if self.die_after is not None and self.drawn + n > self.die_after:
+            return None
+        self.drawn += n
+        return [float(x) for x in rng.uniform(0.0, 1.0, size=n)]
+
+    def features_batch(self, pool) -> np.ndarray:
+        return np.stack([self.features(p) for p in pool])
+
+    def evaluate_batch(self, pool):
+        vals = np.full(len(pool), -np.inf)
+        feas = np.zeros(len(pool), dtype=bool)
+        for i, p in enumerate(pool):
+            v, ok = self.evaluate(p)
+            feas[i] = ok
+            if ok:
+                vals[i] = v
+        return vals, feas
+
+
+def _sequential_reference(spaces, cfg, seeds, **kw):
+    """Per-run `bo_maximize` with the InfeasibleSpace -> empty-result contract
+    the nested driver applies (and `bo_maximize_many` promises to match)."""
+    out = []
+    for space, seed in zip(spaces, seeds):
+        try:
+            out.append(bo_maximize(space, cfg, seed=seed, **kw))
+        except InfeasibleSpace:
+            out.append(BOResult(None, -np.inf, [], [], []))
+    return out
+
+
+def _assert_runs_equal(many, ref):
+    assert len(many) == len(ref)
+    for k, (r, q) in enumerate(zip(many, ref)):
+        assert r.best_point == q.best_point, f"run {k}"
+        assert np.array_equal(r.history, q.history), f"run {k}"
+        assert np.array_equal(r.values, q.values), f"run {k}"
+        assert r.points == q.points, f"run {k}"
+        assert r.n_infeasible == q.n_infeasible, f"run {k}"
+
+
+CFG = SWSearchConfig(n_trials=12, n_warmup=4, pool_size=6)
+
+
+def _mixed_spaces():
+    return [
+        ToySpace(0.1),                           # survives to the full budget
+        ToySpace(0.4, die_after=4),              # dies at the first scored pool
+        ToySpace(0.7, die_after=24),             # dies mid-loop, surrogate live
+        ToySpace(0.9, die_after=2),              # dies during warmup
+        ToySpace(0.2, infeasible_below=0.55),    # classifier engaged, survives
+    ]
+
+
+@pytest.mark.parametrize("gp_refit_every", [1, 3])
+@pytest.mark.parametrize("acquisition", [
+    "lcb", pytest.param("ei", marks=pytest.mark.slow)])
+def test_mixed_convergence_matches_per_run_sequential(acquisition,
+                                                      gp_refit_every):
+    """Lockstep histories/points/values equal the per-run sequential searches
+    through every early-stop state, including runs that die while OTHERS keep
+    scoring (the masks must neither leak dead runs into scoring nor perturb
+    the survivors' RNG streams or refit cadence)."""
+    cfg = SWSearchConfig(n_trials=12, n_warmup=4, pool_size=6,
+                         acquisition=acquisition)
+    seeds = [3, 5, 7, 9, 11]
+    many = bo_maximize_many(_mixed_spaces(), cfg, seed=seeds,
+                            gp_refit_every=gp_refit_every)
+    ref = _sequential_reference(_mixed_spaces(), cfg, seeds,
+                                gp_refit_every=gp_refit_every)
+    _assert_runs_equal(many, ref)
+    # the scripted deaths actually produced the mixed state this test is about
+    assert many[0].best_point is not None
+    assert many[1].best_point is None and many[3].best_point is None
+    # run 2 died mid-loop WITH observations in hand; like the sequential
+    # InfeasibleSpace contract, the partial history is discarded
+    assert many[2].best_point is None and len(many[2].history) == 0
+
+
+def test_all_runs_dying_terminates_early():
+    spaces = [ToySpace(0.1, die_after=10), ToySpace(0.5, die_after=12)]
+    many = bo_maximize_many(spaces, CFG, seed=[1, 2])
+    ref = _sequential_reference([ToySpace(0.1, die_after=10),
+                                 ToySpace(0.5, die_after=12)], CFG, [1, 2])
+    _assert_runs_equal(many, ref)
+    assert all(r.best_point is None for r in many)
+
+
+def test_no_warmup_mixed_convergence():
+    """n_warmup=0: every run starts from single-candidate sampling; deaths in
+    that phase must match the sequential InfeasibleSpace outcome too."""
+    cfg = SWSearchConfig(n_trials=10, n_warmup=0, pool_size=5)
+    def build():
+        return [ToySpace(0.3), ToySpace(0.6, die_after=3),
+                ToySpace(0.8, die_after=15)]
+    seeds = [2, 4, 6]
+    many = bo_maximize_many(build(), cfg, seed=seeds)
+    ref = _sequential_reference(build(), cfg, seeds)
+    _assert_runs_equal(many, ref)
+
+
+def test_death_does_not_disturb_survivor_rng_streams():
+    """A survivor run must draw exactly the same candidate stream whether its
+    lockstep peers die or not."""
+    solo = bo_maximize(ToySpace(0.1), CFG, seed=3)
+    with_dying_peers = bo_maximize_many(
+        [ToySpace(0.1), ToySpace(0.9, die_after=2), ToySpace(0.4, die_after=4)],
+        CFG, seed=[3, 9, 5])[0]
+    assert solo.points == with_dying_peers.points
+    assert np.array_equal(solo.history, with_dying_peers.history)

@@ -1,10 +1,10 @@
-"""Property-based tests (hypothesis) over the system's invariants."""
+"""Property-based tests (hypothesis) over the system's invariants.
+Module-guarded through `hypothesis_support` (skipped whole where hypothesis
+is not installed)."""
 
 import numpy as np
-import pytest
 
-hypothesis = pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st  # noqa: E402
+from hypothesis_support import given, settings, st
 
 from repro.timeloop import HardwareConfig, PAPER_WORKLOADS, evaluate, eyeriss_168
 from repro.timeloop.arch import hw_is_valid, sample_hardware

@@ -6,10 +6,8 @@ suite in `test_batch_jax.py` always runs.
 """
 
 import numpy as np
-import pytest
 
-hypothesis = pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st  # noqa: E402
+from hypothesis_support import given, settings, st
 
 from repro.timeloop import PAPER_WORKLOADS, eyeriss_168  # noqa: E402
 from repro.timeloop import batch as tlb  # noqa: E402
