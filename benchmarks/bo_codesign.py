@@ -347,6 +347,95 @@ def speculative_speedup(model: str = "resnet", n_hw: int = 11, n_sw: int = 40,
     return out
 
 
+def prune_speedup(models=(("dqn", 40), ("mlp", 100)), n_hw: int = 50,
+                  seed: int = 0, reps: int = 2, spec_k: int = 8,
+                  hw_gp_refit_every: int = 8, hw_warmup: int = 2) -> dict:
+    """Semi-decoupled bound gate (`prune="safe"`) vs `strategy="speculative"`
+    alone, at paper-scale outer budgets (n_hw=50) -- the ROADMAP
+    "semi-decoupled pruning" capability.
+
+    The gate skips the whole inner mapping search of any scored probe whose
+    provable EDP lower bound (`timeloop.bounds`) already exceeds the
+    incumbent's true model EDP, observing a censored bound-derived utility
+    instead; the incumbent is only updated by true evaluations, so the final
+    design is unaffected in the safe mode.  The savings scale with how often
+    the outer acquisition selects bound-dominated candidates (uninformed or
+    stale posteriors inside frozen refit windows), so the record carries
+    `*_probes_gated` -- the gate's health signal; a 0 means the bound never
+    vetoed a selection and the two sides did identical work.
+
+    Two records per workload and backend:
+
+      *_speedup      fixed-budget wall-clock ratio, off/safe (both sides run
+                     the identical trial budget; the safe side simply skips
+                     provably-wasted searches)
+      *_ttq_speedup  time-to-matched-quality ratio: time for each side to
+                     first reach the worse of the two finals (guards against
+                     a speedup bought with a quality loss)
+
+    Timing protocol matches `speculative_speedup`: interleaved reps,
+    per-side minimum, jit caches warmed untimed by one full run per side
+    (large outer budgets compile GP buckets the small warmups never touch)."""
+    out: dict = {"n_hw": n_hw, "reps": reps, "spec_k": spec_k,
+                 "hw_gp_refit_every": hw_gp_refit_every, "models": {}}
+
+    def traced(cfg, layers):
+        marks: list[tuple[float, float]] = []
+        t0 = time.perf_counter()
+        r = CodesignEngine(cfg).run(
+            layers, hw_callback=lambda t, res: marks.append(
+                (time.perf_counter() - t0, res.best_value)))
+        return r, marks, time.perf_counter() - t0
+
+    def time_to(marks, target):
+        for t, u in marks:
+            if u >= target:
+                return t
+        return float("inf")
+
+    for model, n_sw in models:
+        layers = MODEL_LAYERS[model]
+        rec: dict = {"n_sw": n_sw}
+        for backend in ("numpy", "jax"):
+            cfgs = {
+                mode: dataclasses.replace(
+                    base := bench_config(
+                        model, n_hw, n_sw, seed=seed, backend=backend,
+                        strategy="speculative", hw_warmup=hw_warmup,
+                        spec_k=spec_k, hw_gp_refit_every=hw_gp_refit_every),
+                    hw=dataclasses.replace(base.hw, prune=mode))
+                for mode in ("off", "safe")
+            }
+            stats = {}
+            for mode, cfg in cfgs.items():  # warm jit caches at full width
+                stats[mode] = CodesignEngine(cfg).run(layers).stats
+            times: dict[str, list[float]] = {m: [] for m in cfgs}
+            ttq: dict[str, list[tuple]] = {m: [] for m in cfgs}
+            finals: dict[str, float] = {}
+            for _ in range(reps):
+                for mode, cfg in cfgs.items():
+                    r, marks, total = traced(cfg, layers)
+                    times[mode].append(total)
+                    ttq[mode].append(marks)
+                    finals[mode] = r.hw_result.best_value
+            target = min(finals["off"], finals["safe"])
+            t_off = min(time_to(m, target) for m in ttq["off"])
+            t_safe = min(time_to(m, target) for m in ttq["safe"])
+            off_s, safe_s = min(times["off"]), min(times["safe"])
+            rec[f"{backend}_off_s"] = round(off_s, 3)
+            rec[f"{backend}_safe_s"] = round(safe_s, 3)
+            rec[f"{backend}_speedup"] = round(off_s / safe_s, 2)
+            rec[f"{backend}_ttq_speedup"] = (
+                round(t_off / t_safe, 2) if t_safe > 0 else None)
+            rec[f"{backend}_probes_gated"] = stats["safe"]["probes_gated"]
+            rec[f"{backend}_gated_fraction"] = round(
+                stats["safe"]["probes_gated"] / n_hw, 3)
+            rec[f"{backend}_pruned_fraction"] = round(
+                stats["safe"]["pruned_fraction"], 3)
+        out["models"][model] = rec
+    return out
+
+
 def run(n_hw: int = 12, n_sw: int = 60, seeds=(0,), quiet: bool = False,
         collect: dict | None = None, backend: str | None = None,
         gp_refit_every: int = 1, config: CodesignConfig | None = None):
@@ -385,7 +474,8 @@ def _finite(x: float):
 
 
 def print_speedups(eng: dict, e2e: dict, lb: dict | None = None,
-                   pf: dict | None = None, spec: dict | None = None) -> None:
+                   pf: dict | None = None, spec: dict | None = None,
+                   prune: dict | None = None) -> None:
     """CSV lines for the engine/e2e speedup records (shared with run.py)."""
     for name, r in eng["layers"].items():
         print(f"engine,{name},scalar={r['scalar_s']}s,"
@@ -422,6 +512,18 @@ def print_speedups(eng: dict, e2e: dict, lb: dict | None = None,
               f"jax_spec={spec['jax_speculative_s']}s,"
               f"jax_speedup={spec['jax_speedup']}x,"
               f"jax_hit_rate={spec['jax_hit_rate']}")
+    if prune is not None:
+        for model, r in prune["models"].items():
+            print(f"prune,{model},"
+                  f"numpy_off={r['numpy_off_s']}s,"
+                  f"numpy_safe={r['numpy_safe_s']}s,"
+                  f"numpy_speedup={r['numpy_speedup']}x,"
+                  f"numpy_ttq_speedup={r['numpy_ttq_speedup']}x,"
+                  f"numpy_gated={r['numpy_probes_gated']},"
+                  f"jax_off={r['jax_off_s']}s,"
+                  f"jax_safe={r['jax_safe_s']}s,"
+                  f"jax_speedup={r['jax_speedup']}x,"
+                  f"jax_gated={r['jax_probes_gated']}")
 
 
 if __name__ == "__main__":
@@ -439,8 +541,12 @@ if __name__ == "__main__":
                     help="inner-loop surrogate refit stride (GP amortization)")
     args = ap.parse_args()
     if args.speedup:
+        # Reduced prune budgets here (the CI smoke's): the paper-scale
+        # defaults belong to benchmarks/run.py's recorded section.
         print_speedups(engine_speedup(), e2e_speedup(), layer_batch_speedup(),
-                       probe_fanout_speedup(), speculative_speedup())
+                       probe_fanout_speedup(), speculative_speedup(),
+                       prune_speedup(models=(("dqn", 20), ("mlp", 25)),
+                                     n_hw=16, reps=1))
     elif args.paper:
         run(n_hw=50, n_sw=250, seeds=(0, 1, 2), backend=args.backend,
             gp_refit_every=args.gp_refit_every)

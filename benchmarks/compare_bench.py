@@ -33,6 +33,12 @@ ratios are as robust as the hot-path ones:
     speculative_e2e.numpy_speedup    (gating; the record also carries the
                                       speculation cache hit-rate per backend)
     speculative_e2e.jax_speedup      (annotating only, like jax_speedup)
+    prune_e2e.models.*.numpy_speedup (gating, one ratio per workload model:
+                                      the bound-gated prune="safe" run vs
+                                      speculative alone at paper-scale outer
+                                      budgets; the record also carries the
+                                      probes-gated count per backend)
+    prune_e2e.models.*.jax_speedup   (annotating only, like jax_speedup)
 
 A missing/invalid previous record is not an error -- first runs and artifact
 expiry just skip the gate with a notice.  Records written before a metric
@@ -73,6 +79,14 @@ def _section_speedups(record: dict, section: str, key: str) -> dict[str, float]:
     holds one ratio per backend (keyed by the workload model so the geomean
     machinery applies unchanged)."""
     lb = record.get(section) or {}
+    if "models" in lb:
+        # Multi-workload section (`prune_e2e`): one ratio per workload model.
+        return {
+            str(m): float(r[key])
+            for m, r in (lb.get("models") or {}).items()
+            if isinstance(r, dict) and isinstance(r.get(key), (int, float))
+            and r[key] > 0
+        }
     v = lb.get(key)
     if not isinstance(v, (int, float)) or v <= 0:
         return {}
@@ -125,12 +139,15 @@ def main() -> int:
         ("probe_fanout.jax_speedup", None, False),
         ("speculative.numpy_speedup", None, True),
         ("speculative.jax_speedup", None, False),
+        ("prune.numpy_speedup", None, True),
+        ("prune.jax_speedup", None, False),
     ):
         if extract is None:
             section, metric = key.split(".", 1)
             section = {"layer_batch": "layer_batch_e2e",
                        "probe_fanout": "probe_fanout_e2e",
-                       "speculative": "speculative_e2e"}[section]
+                       "speculative": "speculative_e2e",
+                       "prune": "prune_e2e"}[section]
             olds = _section_speedups(old, section, metric)
             news = _section_speedups(new, section, metric)
         else:

@@ -81,7 +81,10 @@ def main() -> None:
     pfe = bo_codesign.probe_fanout_speedup()
     print("# speculative scored-trial fan-out vs probe_fanout (per backend)")
     spec = bo_codesign.speculative_speedup()
-    bo_codesign.print_speedups(eng, e2e, lbe, pfe, spec)
+    print("# bound-gated pruning (prune=safe) vs speculative alone "
+          "(paper-scale outer budget, per backend)")
+    prune = bo_codesign.prune_speedup()
+    bo_codesign.print_speedups(eng, e2e, lbe, pfe, spec, prune)
 
     print("# Fig. 5b/5c -- surrogate/acquisition + lambda ablations")
     bo_ablation.run(n_trials=250 if args.paper else 80,
@@ -99,6 +102,7 @@ def main() -> None:
         collect["layer_batch_e2e"] = lbe
         collect["probe_fanout_e2e"] = pfe
         collect["speculative_e2e"] = spec
+        collect["prune_e2e"] = prune
         collect["backend"] = backend
         collect["paper_budgets"] = bool(args.paper)
         collect["total_s"] = round(total, 1)

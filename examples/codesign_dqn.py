@@ -3,7 +3,8 @@
 
     PYTHONPATH=src python examples/codesign_dqn.py [--paper | --tiny]
         [--strategy auto|sequential|layer_batched|probe_fanout|speculative]
-        [--hw-refit-every N] [--backend numpy|jax] [--save-config cfg.json]
+        [--hw-refit-every N] [--prune off|safe|aggressive]
+        [--backend numpy|jax] [--save-config cfg.json]
 
 `--strategy speculative` pairs best with `--hw-refit-every 4`: the outer loop
 then consumes one frozen q-batch per refit window and the speculative fan-out
@@ -16,9 +17,11 @@ back through `python -m benchmarks.run --config cfg.json` (or
 """
 
 import argparse
+import dataclasses
 
-from repro.core import (BACKENDS, STRATEGIES, CodesignConfig, CodesignEngine,
-                        EngineConfig, HWSearchConfig, SWSearchConfig)
+from repro.core import (BACKENDS, PRUNE_MODES, STRATEGIES, CodesignConfig,
+                        CodesignEngine, EngineConfig, HWSearchConfig,
+                        SWSearchConfig)
 from repro.timeloop import MODEL_LAYERS, eyeriss_baseline_edp
 
 
@@ -32,6 +35,7 @@ def build_config(args) -> CodesignConfig:
     else:
         sw = SWSearchConfig(n_trials=60, n_warmup=20, pool_size=60)
         hw = HWSearchConfig(n_trials=12, pool_size=60)
+    hw = dataclasses.replace(hw, prune=args.prune)
     return CodesignConfig(
         sw=sw, hw=hw,
         engine=EngineConfig(backend=args.backend, strategy=args.strategy,
@@ -51,6 +55,9 @@ def main():
                     help="outer-loop GP refit stride; >1 batches the outer "
                          "acquisition into frozen q-batch windows (pairs "
                          "with --strategy speculative)")
+    ap.add_argument("--prune", default="off", choices=PRUNE_MODES,
+                    help="bound-gated pruning of doomed outer probes "
+                         "(timeloop.bounds): 'safe' never changes the result")
     ap.add_argument("--save-config", default=None, metavar="PATH",
                     help="write the CodesignConfig that ran as JSON")
     args = ap.parse_args()
@@ -81,6 +88,10 @@ def main():
         print(f"speculation: {res.stats['spec_evaluated']} probes evaluated "
               f"ahead of time, {res.stats['spec_hits']} consumed "
               f"(hit rate {res.stats['spec_hit_rate']:.0%})")
+    if res.stats and config.hw.prune != "off":
+        print(f"pruning: {res.stats['probes_gated']} probe(s) bound-gated, "
+              f"{res.stats['prune_pruned']} pool candidate(s) removed "
+              f"(pruned fraction {res.stats['pruned_fraction']:.0%})")
     hw = res.best_hw
     print(f"best hardware: PE array {hw.pe_mesh_x}x{hw.pe_mesh_y}, "
           f"LB split I/W/O = {hw.lb_input}/{hw.lb_weight}/{hw.lb_output}, "

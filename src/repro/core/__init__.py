@@ -7,9 +7,10 @@ The search surface is the typed config API (`repro.core.config`):
 """
 
 from repro.core.config import (ACQUISITIONS, BACKENDS, PALLAS_MODES,
-                               STRATEGIES, SURROGATES, CodesignConfig,
-                               EngineConfig, HWSearchConfig, SearchConfig,
-                               SWSearchConfig, config_from_legacy_kwargs)
+                               PRUNE_MODES, STRATEGIES, SURROGATES,
+                               CodesignConfig, EngineConfig, HWSearchConfig,
+                               SearchConfig, SWSearchConfig,
+                               config_from_legacy_kwargs)
 from repro.core.gp import GP, GPClassifier, GPClassifierStack, GPStack
 from repro.core.acquisition import expected_improvement, lcb, make_acquisition
 from repro.core.bo import BOResult, bo_maximize, bo_maximize_many, score_topk
@@ -28,6 +29,7 @@ __all__ = [
     "ACQUISITIONS",
     "BACKENDS",
     "PALLAS_MODES",
+    "PRUNE_MODES",
     "STRATEGIES",
     "SURROGATES",
     "CodesignConfig",

@@ -162,6 +162,7 @@ def bo_maximize(
     noisy: bool = False,
     seed: int = 0,
     gp_refit_every: int = 1,
+    gp_rank1: bool = False,
     callback: Callable[[int, BOResult], None] | None = None,
     backend: str | None = None,
     **overrides,
@@ -171,7 +172,8 @@ def bo_maximize(
         with _backend_override([space], backend):
             return bo_maximize(
                 space, cfg, noisy=noisy, seed=seed,
-                gp_refit_every=gp_refit_every, callback=callback,
+                gp_refit_every=gp_refit_every, gp_rank1=gp_rank1,
+                callback=callback,
             )
     n_trials, n_warmup, pool_size = cfg.n_trials, cfg.n_warmup, cfg.pool_size
     acquisition, lam, surrogate = cfg.acquisition, cfg.lam, cfg.surrogate
@@ -242,6 +244,19 @@ def bo_maximize(
             result.n_infeasible += 1
             result.values.append(-np.inf)
         result.history.append(result.best_value)
+
+    def rank1_update(feat_row) -> None:
+        """`gp_rank1`: fold the observation just recorded into the surrogate's
+        posterior by an O(n^2) incremental Cholesky update (frozen
+        hyperparameters; see `GP.append_observation`) instead of leaving the
+        posterior stale until the next aligned refit.  GP surrogates only --
+        the tree surrogate has no incremental form -- and only feasible
+        observations (infeasible ones never enter the objective GP's data)."""
+        if not (gp_rank1 and isinstance(model, GP)):
+            return
+        v = result.values[-1]
+        if np.isfinite(v):
+            model.append_observation(np.asarray(feat_row, np.float64), v)
 
     def sample_valid(max_attempts: int = 20_000):
         """Rejection sampling against the *known* input constraints (paper §3.4):
@@ -328,8 +343,9 @@ def bo_maximize(
                 utility = utility * classifier.prob_feasible_device(feats_dev)
             _prefetch_topk(space, pool, utility)
             i_best = int(jnp.argmax(utility))
-            observe(pool[i_best],
-                    feats=np.asarray(feats_dev[i_best], dtype=np.float64))
+            feat_row = np.asarray(feats_dev[i_best], dtype=np.float64)
+            observe(pool[i_best], feats=feat_row)
+            rank1_update(feat_row)
             if callback:
                 callback(t, result)
             continue
@@ -344,9 +360,15 @@ def bo_maximize(
             pool, feats = window_pool, window_feats
         elif use_batch:
             pool = sample_valid_pool(pool_size)
-            if elites and isinstance(pool, list):
-                pool = pool + elites
             feats = space.features_batch(pool)
+            if elites and isinstance(pool, list):
+                # Reuse the base pool's packed features (memoized per pool
+                # identity by the space) and append the handful of elite rows
+                # scalar-wise -- same column math, so the stacked matrix is
+                # bit-identical to featurizing pool + elites from scratch.
+                pool = pool + elites
+                feats = np.vstack(
+                    [feats] + [space.features(p)[None] for p in elites])
         else:
             pool = [sample_valid() for _ in range(pool_size)]
             if elites:
@@ -376,6 +398,7 @@ def bo_maximize(
         i_best = int(np.argmax(utility))
         update_elites(pool, utility, i_best)
         observe(pool[i_best], feats=feats[i_best])
+        rank1_update(feats[i_best])
         if callback:
             callback(t, result)
 

@@ -36,6 +36,7 @@ ACQUISITIONS = ("lcb", "ei")
 STRATEGIES = ("auto", "sequential", "layer_batched", "probe_fanout",
               "speculative")
 PALLAS_MODES = ("jnp", "pallas", "interpret")
+PRUNE_MODES = ("off", "safe", "aggressive")
 
 
 def validate_choice(field: str, value, choices, optional: bool = False) -> None:
@@ -98,18 +99,49 @@ class HWSearchConfig(SearchConfig):
     spec_k: fan-out width of the `strategy="speculative"` outer loop -- at each
     scored trial the top-k acquisition candidates are evaluated as one stacked
     multi-run program (the argmax feeds the BO history; the k-1 speculative
-    results prefill the (hw, layer) cache).  Ignored by other strategies."""
+    results prefill the (hw, layer) cache).  Ignored by other strategies.
+
+    prune: the semi-decoupled bound-and-prune pass (`timeloop.bounds`).  A
+    scored probe whose summed per-layer EDP *lower bound* already exceeds the
+    threshold below has its whole inner mapping search skipped (the engine's
+    bound gate observes a censored, bound-derived utility instead, and the
+    speculative fan-out never launches the search); the incumbent is only
+    ever updated by true evaluations, so a vetoed probe provably cannot
+    corrupt the final design:
+      "off"         (default) no pruning
+      "safe"        threshold = incumbent EDP exactly; bound <= truth, so a
+                    vetoed probe provably cannot beat the incumbent
+      "aggressive"  threshold = incumbent EDP * prune_margin -- margin < 1
+                    also vetoes probes whose best case is within (1 - margin)
+                    of the incumbent, trading completeness for speed; the
+                    pool-level prune hook (`HardwareSpace.prune_fn`)
+                    additionally drops bounded-out candidates before the
+                    acquisition ranks them
+    prune_margin: the "aggressive" threshold multiplier (> 0; ignored by
+    "safe", which always uses exactly 1.0).  Pool-level removal is reserved
+    for "aggressive" because redirecting a doomed selection into a different
+    full search is wall-clock neutral -- the measured speedup of "safe"
+    comes from censoring doomed selections, which pool removal would
+    starve."""
 
     n_trials: int = 50
     n_warmup: int = 5
     num_pes: int = 168
     spec_k: int = 4
     elite_k: int = 4  # carry-forward on by default for the outer loop
+    prune: str = "off"
+    prune_margin: float = 1.0
 
     def __post_init__(self) -> None:
         super().__post_init__()
         _validate_positive_int("num_pes", self.num_pes)
         _validate_positive_int("spec_k", self.spec_k)
+        validate_choice("prune", self.prune, PRUNE_MODES)
+        if not (isinstance(self.prune_margin, (int, float))
+                and not isinstance(self.prune_margin, bool)
+                and self.prune_margin > 0.0):
+            raise ValueError(
+                f"prune_margin must be a number > 0, got {self.prune_margin!r}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -142,6 +174,15 @@ class EngineConfig:
     use_cache       share the (hw, layer) -> best-mapping cache across probes
     pallas_mode     inner-kernel dispatch: "jnp" | "pallas" | "interpret" |
                     None (None -> jnp off-TPU, pallas on TPU)
+    gp_rank1_updates
+                    amortize the OUTER surrogate between aligned refits: each
+                    scored trial's feasible observation is appended to the GP
+                    through an O(n^2) rank-1 Cholesky border update (frozen
+                    hyperparameters) instead of waiting for the next O(n^3)
+                    refit, and the posterior reuses the cached factor.  Off by
+                    default: a mid-window posterior update changes frozen-
+                    window trajectories (fresher, but not bit-identical to
+                    the paper's refit-every-trial schedule).
     """
 
     backend: str | None = None
@@ -151,6 +192,7 @@ class EngineConfig:
     batched: bool = True
     use_cache: bool = True
     pallas_mode: str | None = None
+    gp_rank1_updates: bool = False
 
     def __post_init__(self) -> None:
         validate_choice("backend", self.backend, BACKENDS, optional=True)

@@ -130,9 +130,9 @@ def _nll(params, X, y, mask, kind):
 
 @functools.partial(jax.jit,
                    static_argnames=("kind", "steps", "lr", "train_tau",
-                                    "lowrank"))
+                                    "lowrank", "tol"))
 def _fit(params, X, y, mask, kind, steps=80, lr=0.05, train_tau=True,
-         lowrank=False):
+         lowrank=False, tol=0.0):
     # lowrank: optimize the Woodbury form of the linear-kernel NLL (same
     # function to f64 roundoff, O(n d^2) per step) -- the stacked multi-run
     # fit uses it; the single-run path keeps the Cholesky NLL.
@@ -143,9 +143,8 @@ def _fit(params, X, y, mask, kind, steps=80, lr=0.05, train_tau=True,
     else:
         grad_fn = jax.grad(_nll)
 
-    def adam_step(carry, _):
+    def adam_update(carry, g):
         p, m, v, t = carry
-        g = grad_fn(p, X, y, mask, kind)
         if not train_tau:
             # Deterministic evaluator: the noise level is pinned, so exclude it
             # from the update entirely -- otherwise the other hyperparameters
@@ -158,13 +157,96 @@ def _fit(params, X, y, mask, kind, steps=80, lr=0.05, train_tau=True,
         mh = jax.tree.map(lambda a: a / (1 - 0.9**t), m)
         vh = jax.tree.map(lambda a: a / (1 - 0.999**t), v)
         p = jax.tree.map(lambda a, b, c: a - lr * b / (jnp.sqrt(c) + 1e-8), p, mh, vh)
-        return (p, m, v, t), None
+        return p, m, v, t
 
     zeros = jax.tree.map(jnp.zeros_like, params)
-    (params, _, _, _), _ = jax.lax.scan(
-        adam_step, (params, zeros, zeros, 0.0), None, length=steps
-    )
+    if tol == 0.0:
+        # Fixed-length scan: the default path, byte-for-byte the pre-tol fit.
+        def adam_step(carry, _):
+            g = grad_fn(carry[0], X, y, mask, kind)
+            return adam_update(carry, g), None
+
+        (params, _, _, _), _ = jax.lax.scan(
+            adam_step, (params, zeros, zeros, 0.0), None, length=steps
+        )
+        return params
+
+    # Gradient-norm early-exit (tolerance-gated): identical Adam updates, but
+    # the loop stops once the global gradient norm of the step just applied
+    # drops below `tol` -- converged fits skip the remaining steps instead of
+    # always burning all `steps` of them.
+    def cond(carry):
+        _, _, _, t, gn = carry
+        return (t < steps) & (gn >= tol)
+
+    def body(carry):
+        p, m, v, t, _ = carry
+        g = grad_fn(p, X, y, mask, kind)
+        if not train_tau:
+            g = dict(g, log_tau=jnp.zeros_like(g["log_tau"]))
+        gn = jnp.sqrt(sum(jnp.sum(leaf ** 2) for leaf in jax.tree.leaves(g)))
+        p, m, v, t = adam_update((p, m, v, t), g)
+        return p, m, v, t, gn
+
+    params, _, _, _, _ = jax.lax.while_loop(
+        cond, body, (params, zeros, zeros, 0.0, jnp.asarray(jnp.inf, X.dtype)))
     return params
+
+
+# --- incremental (rank-1) posterior updates --------------------------------------
+#
+# Between aligned refits the BO loop's surrogate hyperparameters are frozen, so
+# appending one observation only changes the DATA side of the posterior: the
+# padded kernel matrix gains one real row/column in the first padded slot.
+# Because padded rows are exactly decoupled (zero off-diagonal, _PAD_NOISE
+# diagonal -- see module docstring), the Cholesky factor of the updated matrix
+# differs from the cached one in exactly that row: a standard border update
+# L[n, :n] = L^-1 k_new, L[n, n] = sqrt(k(x,x) + noise + jitter - |L[n,:n]|^2),
+# computed in O(n^2) instead of the O(n^3) refactorization `_posterior` does
+# per call.  Posterior queries then reuse the cached factor (`_posterior_chol`)
+# -- the same downstream solves as `_posterior`, parity-pinned to <= 1e-8 in
+# tests/test_gp_rank1.py against a frozen-hyperparameter refit from scratch.
+
+@functools.partial(jax.jit, static_argnames=("kind",))
+def _chol_factor(params, X, mask, kind):
+    """Cholesky factor of the masked padded kernel matrix (the same K that
+    `_nll` / `_posterior` build internally)."""
+    k = KERNELS[kind]
+    noise = jnp.exp(2.0 * params["log_tau"])
+    diag = jnp.where(mask > 0.5, noise + _JITTER, _PAD_NOISE)
+    K = k(params, X, X) * (mask[:, None] * mask[None, :]) + jnp.diag(diag)
+    return jnp.linalg.cholesky(K)
+
+
+@functools.partial(jax.jit, static_argnames=("kind",))
+def _append_row(params, L, X, y, mask, x, val, kind):
+    """Rank-1 border update: append one observation into the first padded
+    slot, updating the cached factor in O(n^2).  Returns (L, X, y, mask)."""
+    k = KERNELS[kind]
+    n = jnp.sum(mask).astype(jnp.int32)  # first padded slot (pads trail)
+    kv = k(params, X, x[None])[:, 0] * mask  # zero on padded rows
+    w = jax.scipy.linalg.solve_triangular(L, kv, lower=True)
+    noise = jnp.exp(2.0 * params["log_tau"])
+    knn = k(params, x[None], x[None])[0, 0] + noise + _JITTER
+    row = w.at[n].set(jnp.sqrt(knn - w @ w))
+    return (L.at[n, :].set(row), X.at[n, :].set(x), y.at[n].set(val),
+            mask.at[n].set(1.0))
+
+
+@functools.partial(jax.jit, static_argnames=("kind",))
+def _posterior_chol(params, L, X, y, mask, Xs, kind):
+    """`_posterior` with the Cholesky factor precomputed (the incremental
+    path): identical solves, no per-query refactorization."""
+    k = KERNELS[kind]
+    c = params["mean_const"]
+    r = jnp.where(mask > 0.5, y - c, 0.0)
+    alpha = jax.scipy.linalg.cho_solve((L, True), r)
+    Ks = k(params, Xs, X) * mask[None, :]
+    mu = Ks @ alpha + c
+    v = jax.scipy.linalg.solve_triangular(L, Ks.T, lower=True)
+    kss = jax.vmap(lambda x: k(params, x[None], x[None])[0, 0])(Xs)
+    var = jnp.maximum(kss - jnp.sum(v**2, axis=0), 1e-10)
+    return mu, var
 
 
 @functools.partial(jax.jit, static_argnames=("kind",))
@@ -192,12 +274,22 @@ class GP:
     kind:        'se' or 'linear'
     noisy:       if False, the noise is pinned tiny (deterministic evaluator,
                  paper §4.3); if True it is a learned hyperparameter (paper §4.2).
+    fit_tol:     gradient-norm early-exit tolerance for the hyperparameter fit
+                 (0.0 = off: the fixed-length scan, bit-identical to the
+                 historical fit).
     """
 
     kind: str = "linear"
     noisy: bool = True
     steps: int = 80
+    fit_tol: float = 0.0
     _state: tuple | None = None
+    # Cached Cholesky factor of the data kernel matrix, maintained by
+    # `append_observation` between aligned refits.  None (the default) keeps
+    # every posterior on the factor-free `_posterior` path -- the incremental
+    # machinery is strictly opt-in, so fitted GPs behave byte-for-byte as
+    # before unless the BO loop explicitly appends.
+    _fac: jax.Array | None = None
 
     def fit(self, X: np.ndarray, y: np.ndarray) -> "GP":
         X = np.asarray(X, np.float64)
@@ -218,9 +310,10 @@ class GP:
             # against the true fixed noise level -- no post-fit re-pin needed.
             params = _fit(params, jnp.asarray(Xp), jnp.asarray(yp),
                           jnp.asarray(mask), self.kind, self.steps,
-                          train_tau=self.noisy)
+                          train_tau=self.noisy, tol=self.fit_tol)
             self._state = (params, jnp.asarray(Xp), jnp.asarray(yp),
                            jnp.asarray(mask))
+        self._fac = None  # a full refit invalidates any incremental factor
         return self
 
     def posterior(self, Xs: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
@@ -229,12 +322,73 @@ class GP:
 
     def posterior_device(self, Xs) -> tuple[jax.Array, jax.Array]:
         """Posterior as device arrays -- lets the batched-engine acquisition
-        scoring stay device-resident (no host round-trip per BO trial)."""
+        scoring stay device-resident (no host round-trip per BO trial).
+        With an incremental factor cached (`append_observation`), reuses it
+        instead of refactorizing per call."""
         assert self._state is not None, "fit() first"
         params, Xp, yp, mask = self._state
         with enable_x64():
             Xs = jnp.asarray(Xs, jnp.float64)
+            if self._fac is not None:
+                return _posterior_chol(params, self._fac, Xp, yp, mask, Xs,
+                                       self.kind)
             return _posterior(params, Xp, yp, mask, Xs, self.kind)
+
+    def append_observation(self, x: np.ndarray, y: float) -> "GP":
+        """Fold one observation into the posterior WITHOUT refitting
+        hyperparameters: an O(n^2) rank-1 border update of the cached Cholesky
+        factor (built lazily on first append).  Between aligned refits this
+        keeps the surrogate's data current at a fraction of a full fit's cost;
+        the next `fit()` discards the factor and re-learns hyperparameters as
+        usual.  Parity: matches `with_data` (frozen-hyperparameter refit from
+        scratch) to <= 1e-8."""
+        assert self._state is not None, "fit() first"
+        params, Xp, yp, mask = self._state
+        n = int(np.asarray(mask).sum())
+        b = Xp.shape[0]
+        with enable_x64():
+            if n >= b:
+                # Bucket overflow: repad to the next bucket and refactorize
+                # (O(n^3), but only at power-of-two boundaries -- amortized
+                # O(n^2) per append).
+                b2 = _bucket(n + 1)
+                Xp2 = np.zeros((b2, Xp.shape[1]))
+                yp2 = np.zeros((b2,))
+                mask2 = np.zeros((b2,))
+                Xp2[:n] = np.asarray(Xp)[:n]
+                yp2[:n] = np.asarray(yp)[:n]
+                mask2[:n] = 1.0
+                Xp, yp, mask = (jnp.asarray(Xp2), jnp.asarray(yp2),
+                                jnp.asarray(mask2))
+                self._fac = None
+            if self._fac is None:
+                self._fac = _chol_factor(params, Xp, mask, self.kind)
+            self._fac, Xp, yp, mask = _append_row(
+                params, self._fac, Xp, yp, mask,
+                jnp.asarray(np.asarray(x, np.float64)), float(y), self.kind)
+        self._state = (params, Xp, yp, mask)
+        return self
+
+    def with_data(self, X: np.ndarray, y: np.ndarray) -> "GP":
+        """A new GP with THIS model's (frozen) hyperparameters and the given
+        dataset, state rebuilt from scratch -- the refit-from-scratch parity
+        reference for `append_observation`."""
+        assert self._state is not None, "fit() first"
+        params = self._state[0]
+        X = np.asarray(X, np.float64)
+        y = np.asarray(y, np.float64)
+        n, d = X.shape
+        b = _bucket(n)
+        Xp = np.zeros((b, d))
+        yp = np.zeros((b,))
+        mask = np.zeros((b,))
+        Xp[:n], yp[:n], mask[:n] = X, y, 1.0
+        other = GP(kind=self.kind, noisy=self.noisy, steps=self.steps,
+                   fit_tol=self.fit_tol)
+        with enable_x64():
+            other._state = (params, jnp.asarray(Xp), jnp.asarray(yp),
+                            jnp.asarray(mask))
+        return other
 
     @property
     def params(self):

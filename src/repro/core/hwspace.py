@@ -63,6 +63,15 @@ class HardwareSpace:
     # k-1 speculative probes' for whichever later trial selects them.
     prefetch_topk_fn: Callable[[list[HardwareConfig]], None] | None = None
     prefetch_topk: int = 0
+    # prune_fn(pool) -> pool: optional bound-and-prune hook applied to every
+    # sampled candidate pool (warmup and scored trials alike).  The nested
+    # driver injects it when `HWSearchConfig.prune != "off"`: candidates whose
+    # summed per-layer EDP lower bound (`timeloop.bounds`) already exceeds the
+    # incumbent's true model EDP are dropped before featurization, so the
+    # acquisition -- and the speculative prefetch riding on it -- only ever
+    # spends inner searches on candidates that can still win.  Must return a
+    # non-empty subset (the driver's guard keeps the lowest-bound candidate).
+    prune_fn: Callable[[list[HardwareConfig]], list[HardwareConfig]] | None = None
     # Opt in to the BO loop's frozen refit windows (gp_refit_every > 1 reuses
     # one pool per refit window with consumed candidates masked -- batched
     # q-batch acquisition).  An outer-loop semantic: spaces without this stay
@@ -74,6 +83,14 @@ class HardwareSpace:
     # itself is the nested inner search and stays scalar (see module
     # docstring).  Set False to force the scalar reference path.
     supports_batch: bool = True
+
+    def __post_init__(self) -> None:
+        # One-slot pool-identity memo (the `SoftwareSpace._fwd_cache` idiom):
+        # a frozen refit window re-presents the SAME pool object across its
+        # trials, and the prune pass featurizes pools the BO loop featurizes
+        # again -- deriving the packed (n, 11) matrix once per pool object
+        # makes every repeat free.
+        self._feat_cache: tuple[object, np.ndarray] | None = None
 
     @property
     def feature_dim(self) -> int:
@@ -114,11 +131,20 @@ class HardwareSpace:
 
     def sample_pool(self, rng, n: int) -> list[HardwareConfig]:
         """n input-valid configs, array-vectorized draws (every draw satisfies
-        the structural constraints by construction, so no rejection rounds)."""
-        return sample_hardware_pool(rng, n, num_pes=self.num_pes, base=self.base)
+        the structural constraints by construction, so no rejection rounds).
+        An injected `prune_fn` filters the draw afterwards -- it consumes no
+        RNG, so runs with pruning off and on share the identical sample
+        stream."""
+        pool = sample_hardware_pool(rng, n, num_pes=self.num_pes, base=self.base)
+        if self.prune_fn is not None:
+            pool = self.prune_fn(pool)
+        return pool
 
     def features_batch(self, pool) -> np.ndarray:
-        """(n, 11) feature matrix computed as whole-array column ops."""
+        """(n, 11) feature matrix computed as whole-array column ops, memoized
+        per pool identity (see `__post_init__`)."""
+        if self._feat_cache is not None and self._feat_cache[0] is pool:
+            return self._feat_cache[1]
         cols = np.array(
             [
                 [hw.pe_mesh_x, hw.pe_mesh_y, hw.gb_mesh_x, hw.gb_mesh_y,
@@ -129,7 +155,7 @@ class HardwareSpace:
             dtype=np.float64,
         ).T
         (mx, my, gx, gy, li, lw, lo, budget, gbi, gbbw, fw, fh) = cols
-        return np.stack(
+        feats = np.stack(
             [
                 mx / gx,
                 my / gy,
@@ -145,6 +171,8 @@ class HardwareSpace:
             ],
             axis=1,
         )
+        self._feat_cache = (pool, feats)
+        return feats
 
     def evaluate_batch(self, pool) -> tuple[np.ndarray, np.ndarray]:
         """Scalar evaluation per config (each is a full inner software search;

@@ -46,7 +46,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import warnings
-from typing import Sequence
+from typing import Callable, Sequence
 
 import numpy as np
 
@@ -71,7 +71,10 @@ class CoDesignResult:
     layer_edps: dict[str, float]
     # Engine accounting for the run: speculative probes evaluated / consumed
     # as cache hits and the resulting hit rate (all zero for non-speculative
-    # strategies).
+    # strategies), plus the bound-and-prune pass's candidates considered /
+    # pruned and the resulting pruned fraction, and the scored probes whose
+    # whole inner search was vetoed by the bound gate (`probes_gated`; all
+    # zero with prune="off").
     stats: dict | None = None
 
 
@@ -295,6 +298,8 @@ class ProbeFanoutProbes(LayerBatchedProbes):
             if hw in seen:
                 continue  # later duplicate -> cache hit at evaluation time
             seen.add(hw)
+            if engine.probe_doomed(hw):
+                continue  # bound veto: the gate censors it if ever consumed
             todo = [(hw, layer) for layer in dict.fromkeys(engine._layers)
                     if (hw, layer) not in engine.cache]
             if not todo:
@@ -406,6 +411,7 @@ class CodesignEngine:
         self._layers: list[ConvLayer] = []
         self.stats: dict[str, int] = {"spec_evaluated": 0, "spec_hits": 0}
         self._speculated: set[HardwareConfig] = set()
+        self._gate: Callable | None = None
 
     def probe_seed(self, hw: HardwareConfig) -> int:
         """Content-derived inner-search seed for one hardware probe: a stable
@@ -417,14 +423,132 @@ class CodesignEngine:
         return int.from_bytes(
             hashlib.blake2s(data, digest_size=8).digest(), "big")
 
-    def run(self, layers: Sequence[ConvLayer]) -> CoDesignResult:
+    def _make_prune_fn(self, best: dict):
+        """Bound-and-prune closure for `HardwareSpace.prune_fn` (the
+        semi-decoupled pass, `timeloop.bounds`): drop pool candidates whose
+        summed per-layer EDP lower bound exceeds the incumbent's true model
+        EDP times `prune_margin`.  RNG-free, so the sample stream is
+        untouched.
+
+        Engaged only under `prune="aggressive"`: pool-level removal redirects
+        every doomed selection into a *different* full inner search, which is
+        wall-clock neutral at a fixed trial budget -- and it starves the
+        bound gate (`_make_probe_gate`), whose censored cheap trials are
+        where the measured "safe" speedup comes from.  Returns None
+        otherwise."""
+        cfg = self.config
+        if cfg.hw.prune != "aggressive":
+            return None
+        margin = cfg.hw.prune_margin
+        layt = None          # (layb, caps) packed lazily: run() owns _layers
+        memo = [None, None]  # one-slot (pool identity, summed bounds) memo
+
+        def bound_sums(pool) -> np.ndarray:
+            nonlocal layt
+            if memo[0] is pool:
+                return memo[1]
+            if self.backend == "jax":
+                from repro.timeloop.batch_jax import edp_lower_bounds_device
+                lbs = edp_lower_bounds_device(pool, self._layers)
+            else:
+                from repro.timeloop.batch import edp_lower_bounds_batch
+                from repro.timeloop.bounds import (hw_bound_vecs, layer_caps,
+                                                   layer_bound_vecs)
+                if layt is None:
+                    layt = (layer_bound_vecs(self._layers),
+                            layer_caps(self._layers))
+                lbs = edp_lower_bounds_batch(hw_bound_vecs(pool), *layt)
+            memo[0], memo[1] = pool, lbs.sum(axis=1)
+            return memo[1]
+
+        def prune(pool):
+            incumbent = best["edp"]
+            if not pool or not np.isfinite(incumbent):
+                return pool  # warmup: no incumbent yet, nothing to bound
+            sums = bound_sums(pool)
+            keep = sums <= incumbent * margin
+            self.stats["prune_considered"] += len(pool)
+            if keep.all():
+                return pool
+            if not keep.any():
+                # Guard: never empty the pool -- keep the candidate with the
+                # best (lowest) bound so the BO trial always has a point.
+                keep[int(np.argmin(sums))] = True
+            self.stats["prune_pruned"] += int(len(pool) - keep.sum())
+            return [hw for hw, k in zip(pool, keep) if k]
+
+        return prune
+
+    def _make_probe_gate(self, best: dict):
+        """Bound gate for scored probe evaluations: when the selected probe's
+        summed per-layer lower bound already exceeds the incumbent's true
+        model EDP (times `prune_margin` under "aggressive"), its whole inner
+        mapping search is provably wasted -- the probe cannot win -- so the
+        gate skips it and hands the outer loop a *censored* utility instead:
+        `-log10(max(bound, incumbent))`, an upper bound on the probe's true
+        utility that is clamped to never displace the incumbent as
+        `best_value`.  The incumbent itself is only ever updated by true
+        evaluations, so gating cannot corrupt the final answer -- it only
+        swaps a doomed search for a certificate of doom.
+
+        The savings come from acquisition mistakes: trials whose selected
+        candidate an uninformed or stale posterior ranked on top even though
+        the bound already rules it out (frozen refit windows consume a pool
+        ranked against a posterior that is stale by up to `gp_refit_every`
+        trials).  Each such trial collapses from a full k*L-trial inner
+        search to one vectorized bound lookup, and the censored observation
+        teaches the surrogate the region is dominated without searching it.
+        Returns None when `hw.prune == "off"`."""
+        cfg = self.config
+        if cfg.hw.prune == "off":
+            return None
+        from repro.timeloop.bounds import lower_bound
+
+        margin = 1.0 if cfg.hw.prune == "safe" else cfg.hw.prune_margin
+
+        def gate(hw: HardwareConfig, count: bool = True) -> float | None:
+            incumbent = best["edp"]
+            if not np.isfinite(incumbent):
+                return None  # warmup: no incumbent to bound against
+            if all((hw, layer) in self.cache for layer in self._layers):
+                return None  # search already paid for: use the true value
+            s = sum(lower_bound(hw, layer) for layer in self._layers)
+            if s <= incumbent * margin:
+                return None
+            if count:
+                self.stats["probes_gated"] += 1
+            return -float(np.log10(max(s, incumbent)))
+
+        return gate
+
+    def probe_doomed(self, hw: HardwareConfig) -> bool:
+        """True when the bound gate would veto this probe's inner search --
+        fan-out strategies use it to keep provably-wasted searches out of
+        their stacked programs (the gate itself censors the probe if the
+        outer loop ever consumes it)."""
+        return self._gate is not None and self._gate(hw, count=False) is not None
+
+    def run(self, layers: Sequence[ConvLayer],
+            hw_callback: Callable[[int, "BOResult"], None] | None = None,
+            ) -> CoDesignResult:
+        """Run the nested search over `layers`.  `hw_callback(t, bo_result)`,
+        when given, fires after every outer hardware trial (the `bo_maximize`
+        callback) -- the prune benchmark uses it to timestamp the incumbent
+        trajectory (time-to-quality measurements)."""
         cfg = self.config
         self._layers = list(layers)
-        self.stats = {"spec_evaluated": 0, "spec_hits": 0}
+        self.stats = {"spec_evaluated": 0, "spec_hits": 0,
+                      "prune_considered": 0, "prune_pruned": 0,
+                      "probes_gated": 0}
         self._speculated = set()
         best = {"edp": np.inf, "hw": None, "maps": None, "per_layer": None}
+        gate = self._gate = self._make_probe_gate(best)
 
         def eval_hw(hw: HardwareConfig):
+            if gate is not None:
+                censored = gate(hw)
+                if censored is not None:
+                    return censored, True  # bound veto: no inner search run
             self.strategy.evaluate_probe(self, hw, self.probe_seed(hw))
             total_edp = 0.0
             maps: dict[str, Mapping] = {}
@@ -454,17 +578,23 @@ class CodesignEngine:
                 (lambda cands: self.strategy.prefetch_topk(self, cands))
                 if spec_k > 1 else None),
             prefetch_topk=spec_k,
+            prune_fn=self._make_prune_fn(best),
         )
         hw_result = bo_maximize(
             space, cfg.hw,
             noisy=True,  # inner search stochasticity (paper §4.2)
             seed=cfg.seed,
             gp_refit_every=cfg.engine.hw_gp_refit_every,
+            gp_rank1=cfg.engine.gp_rank1_updates,
+            callback=hw_callback,
         )
         stats = dict(self.stats)
         stats["spec_hit_rate"] = (
             stats["spec_hits"] / stats["spec_evaluated"]
             if stats["spec_evaluated"] else 0.0)
+        stats["pruned_fraction"] = (
+            stats["prune_pruned"] / stats["prune_considered"]
+            if stats["prune_considered"] else 0.0)
         return CoDesignResult(
             best_hw=best["hw"],
             best_mappings=best["maps"],

@@ -84,6 +84,10 @@ class SoftwareSpace:
         # pool object must share a single dispatch (the BO warmup calls two of
         # them back to back).
         self._fwd_cache: tuple[object, dict] | None = None
+        # NumPy twin of the memo: one-slot pool-identity cache for the packed
+        # feature matrix, so repeat featurizations of the same pool object
+        # (frozen refit windows, outer-loop hooks) are free on either backend.
+        self._np_feat_cache: tuple[object, np.ndarray] | None = None
 
     def _forward_jax(self, pool) -> dict:
         # Deferred import: the default NumPy backend must not pay for (or
@@ -158,7 +162,11 @@ class SoftwareSpace:
     def features_batch(self, pool: tlb.MappingBatch) -> np.ndarray:
         if self.backend == "jax":
             return np.asarray(self._forward_jax(pool)["features"])
-        return tlb.features_batch(pool, self.hw, self.layer)
+        if self._np_feat_cache is not None and self._np_feat_cache[0] is pool:
+            return self._np_feat_cache[1]
+        feats = tlb.features_batch(pool, self.hw, self.layer)
+        self._np_feat_cache = (pool, feats)
+        return feats
 
     def evaluate_batch(self, pool: tlb.MappingBatch) -> tuple[np.ndarray, np.ndarray]:
         """Returns (utility (B,), feasible (B,)); utility is -log10(EDP) with

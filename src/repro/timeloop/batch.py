@@ -293,6 +293,41 @@ def evaluate_batch(
     }
 
 
+# --- EDP lower bounds (bound-and-prune pass) -------------------------------------
+
+def edp_lower_bounds_batch(hwb: np.ndarray, layb: np.ndarray,
+                           caps: np.ndarray) -> np.ndarray:
+    """(n_hw, L) provable EDP lower bounds over a pool x layer stack.
+
+    `hwb` is the (n, 11) matrix of `bounds.hw_bound_vecs` -- the `edp_reduce`
+    consts block [e_mac, e_lb, e_noc, e_gb_acc, e_dram, gb_bw, dram_bw] with
+    mesh shape + dataflow pins appended -- `layb` the (L, 2)
+    [macs, traffic_lb] matrix of `bounds.layer_bound_vecs`, and `caps` the
+    (L, 4, A) sorted spatial-cap tables of `bounds.layer_caps` (one row per
+    dataflow variant).  Whole-array twin of `bounds.lower_bound` (derivation
+    there), parity-pinned in tests/test_bounds.py.
+    """
+    hwb = np.asarray(hwb, np.float64)
+    layb = np.asarray(layb, np.float64)
+    caps = np.asarray(caps, np.float64)
+    e_mac, e_lb, e_noc, e_gb, e_dram, gb_bw, dram_bw = (
+        hwb[:, j:j + 1] for j in range(7))
+    mx, my = hwb[:, 7], hwb[:, 8]
+    # dataflow variant per config: v = 2*(df_fh==2) + (df_fw==2)
+    v = (2 * (hwb[:, 10] == 2.0) + (hwb[:, 9] == 2.0)).astype(np.intp)
+    capsel = caps[:, v, :]  # (L, n, A): each config's variant row, per layer
+    # largest achievable spatial product <= each mesh axis (tables contain 1)
+    ax = np.max(np.where(capsel <= mx[None, :, None], capsel, 1.0), axis=-1)
+    ay = np.max(np.where(capsel <= my[None, :, None], capsel, 1.0), axis=-1)
+    used = (ax * ay).T  # (n, L) best-achievable PE count
+    macs, traffic = layb[:, 0][None, :], layb[:, 1][None, :]
+    energy = (macs * e_mac + (4.0 * macs + traffic) * e_lb
+              + traffic * (e_noc + e_gb + e_dram))
+    delay = np.maximum(macs / used,
+                       np.maximum(traffic / gb_bw, traffic / dram_bw))
+    return energy * delay
+
+
 # --- features ------------------------------------------------------------------
 
 def features_batch(

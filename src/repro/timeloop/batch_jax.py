@@ -308,6 +308,59 @@ def forward_device_stacked(
     return {k: v.reshape(L, b, *v.shape[1:])[:, :B] for k, v in out.items()}
 
 
+# --- EDP lower bounds (bound-and-prune pass) -------------------------------------
+
+@jax.jit
+def _lower_bounds(hwv, layb, caps):
+    """(n, L) provable EDP lower bounds from (n, 15) hw vectors + (L, 2)
+    [macs, traffic_lb] layer constants + (L, 4, A) sorted spatial-cap tables.
+    Reuses the `hw_vec` plumbing of the fused forward: the energy/bandwidth
+    block is the same `hwv[:, H_EMAC:]` consts slice `edp_reduce` consumes,
+    and the mesh shape + dataflow pins select each config's best-achievable
+    PE count from the cap tables.  Same formulas as `bounds.lower_bound` /
+    `batch.edp_lower_bounds_batch` (derivation in `timeloop.bounds`)."""
+    consts = hwv[:, H_EMAC:]
+    e_mac, e_lb, e_noc, e_gb, e_dram, gb_bw, dram_bw = (
+        consts[:, j:j + 1] for j in range(7))
+    # dataflow variant per config: v = 2*(df_fh==2) + (df_fw==2)
+    v = (2 * (hwv[:, H_DFH] == 2.0) + (hwv[:, H_DFW] == 2.0)).astype(jnp.int32)
+    capsel = jnp.take(caps, v, axis=1)  # (L, n, A)
+    mx, my = hwv[:, H_MX], hwv[:, H_MY]
+    ax = jnp.max(jnp.where(capsel <= mx[None, :, None], capsel, 1.0), axis=-1)
+    ay = jnp.max(jnp.where(capsel <= my[None, :, None], capsel, 1.0), axis=-1)
+    used = (ax * ay).T  # (n, L) best-achievable PE count
+    macs, traffic = layb[:, 0][None, :], layb[:, 1][None, :]
+    energy = (macs * e_mac + (4.0 * macs + traffic) * e_lb
+              + traffic * (e_noc + e_gb + e_dram))
+    delay = jnp.maximum(macs / used,
+                        jnp.maximum(traffic / gb_bw, traffic / dram_bw))
+    return energy * delay
+
+
+def edp_lower_bounds_device(hws, layers, dtype: str | None = None) -> np.ndarray:
+    """(n_hw, L) bound matrix over a hardware pool x layer stack as ONE jitted
+    dispatch -- the JAX twin of `bounds.edp_lower_bounds`, parity-pinned in
+    tests/test_bounds.py.  The pool axis is padded to the shared power-of-two
+    buckets (all-ones padding rows are benign: every bound input is >= 1, and
+    an all-ones row selects variant 0 with unit mesh caps), so the compiled
+    program is reused across pool sizes; results come back to the host, where
+    the prune hook filters plain candidate lists."""
+    from repro.timeloop.bounds import layer_bound_vecs, layer_caps
+
+    _, dtype = _resolve(None, dtype)
+    n = len(hws)
+    b = _bucket(n)
+    hwv = np.ones((b, 15), np.float64)
+    if n:
+        hwv[:n] = hw_vecs(hws)
+    ctx = enable_x64() if dtype == "float64" else contextlib.nullcontext()
+    with ctx:
+        out = _lower_bounds(jnp.asarray(hwv, dtype),
+                            jnp.asarray(layer_bound_vecs(layers), dtype),
+                            jnp.asarray(layer_caps(layers), dtype))
+    return np.asarray(out)[:n]
+
+
 # --- host-facing twins of the NumPy engine -------------------------------------
 
 def valid_batch(

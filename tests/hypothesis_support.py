@@ -18,7 +18,7 @@ hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (ACQUISITIONS, BACKENDS, PALLAS_MODES,  # noqa: E402
-                        STRATEGIES, SURROGATES)
+                        PRUNE_MODES, STRATEGIES, SURROGATES)
 
 # --- CodesignConfig strategies ----------------------------------------------------
 # Valid-by-construction section dicts (the from_dict surface): every enumerated
@@ -41,7 +41,10 @@ hw_sections = st.fixed_dictionaries(
     {},
     optional=dict(search_fields,
                   num_pes=st.sampled_from([64, 128, 168, 256]),
-                  spec_k=st.integers(1, 8)),
+                  spec_k=st.integers(1, 8),
+                  prune=st.sampled_from(PRUNE_MODES),
+                  prune_margin=st.floats(0.125, 4.0, allow_nan=False,
+                                         allow_infinity=False)),
 )
 
 engine_sections = st.fixed_dictionaries(
@@ -56,6 +59,7 @@ engine_sections = st.fixed_dictionaries(
         hw_gp_refit_every=st.integers(1, 8),
         batched=st.booleans(),
         use_cache=st.booleans(),
+        gp_rank1_updates=st.booleans(),
         pallas_mode=st.sampled_from([None, *PALLAS_MODES]),
     ),
 )

@@ -1,0 +1,121 @@
+"""EDP lower bounds (ISSUE 6, the bound-and-prune pass): soundness of
+`bounds.lower_bound` against the scalar evaluator over random valid mappings,
+and three-way parity of the scalar reference vs the vectorized twins
+(`batch.edp_lower_bounds_batch` on NumPy, `batch_jax.edp_lower_bounds_device`
+as one jitted dispatch).  The hypothesis-randomized soundness property lives
+in tests/test_property.py (module-guarded); this module is the always-on
+tier-1 cover with a fixed seeded corpus.
+"""
+
+import numpy as np
+import pytest
+
+from repro.timeloop import MODEL_LAYERS, evaluate, eyeriss_168
+from repro.timeloop.arch import hw_is_valid, sample_hardware
+from repro.timeloop.batch import edp_lower_bounds_batch
+from repro.timeloop.batch_jax import edp_lower_bounds_device
+from repro.timeloop.bounds import (_touched, edp_lower_bounds, hw_bound_vecs,
+                                   layer_bound_vecs, layer_caps, lower_bound,
+                                   traffic_lower_bound, used_pes_cap)
+from repro.timeloop.mapping import constrained_random_mapping, mapping_is_valid
+
+# A small mixed pool (both seed PE budgets) + every distinct seed-workload
+# layer: enough shape diversity to exercise all four dataflow variants and
+# both mesh families without making tier-1 slow.
+_LAYERS = [layer for model in sorted(MODEL_LAYERS)
+           for layer in MODEL_LAYERS[model]]
+
+
+def _pool(n=12, seed=0):
+    rng = np.random.default_rng(seed)
+    pool = [eyeriss_168()]
+    while len(pool) < n:
+        hw = sample_hardware(rng, num_pes=168 if len(pool) % 2 else 256)
+        if hw_is_valid(hw)[0]:
+            pool.append(hw)
+    return pool
+
+
+def test_touched_axis_semantics():
+    """touched(P, R) = distinct input positions along one axis: the halo
+    extent when strides overlap, P*R disjoint windows when stride > R."""
+    assert _touched(8, 1, 1) == 8          # 1x1 filter: one input per output
+    assert _touched(8, 3, 1) == 10         # overlapping: (8-1)*1 + 3
+    assert _touched(8, 3, 2) == 17         # stride 2, filt 3: still the halo
+    assert _touched(8, 3, 4) == 24         # gapped (stride > filt): 8*3 wins
+    assert _touched(1, 5, 7) == 5          # single output: the filter extent
+
+
+def test_traffic_bound_at_least_naive_and_tighter_with_filters():
+    """traffic_lb >= weights + outputs + P*Q*C always (each axis touches at
+    least P positions), with strict improvement whenever R or S > 1."""
+    for layer in _LAYERS:
+        lb = traffic_lower_bound(layer)
+        naive = layer.weight_size + layer.output_size + layer.P * layer.Q * layer.C
+        assert lb >= naive
+        if layer.R > 1 or layer.S > 1:
+            assert lb > naive
+
+
+def test_used_pes_cap_within_mesh():
+    """The divisor-structure PE cap never exceeds the physical mesh, and is
+    at least 1 (the all-temporal mapping always exists)."""
+    for hw in _pool(6):
+        for layer in _LAYERS[:6]:
+            cap = used_pes_cap(hw, layer)
+            assert 1.0 <= cap <= hw.pe_mesh_x * hw.pe_mesh_y
+
+
+def test_scalar_numpy_jax_parity():
+    """The three bound implementations agree: scalar reference vs the NumPy
+    pool-batch vs the jitted device twin, over a mixed pool x all seed
+    layers."""
+    pool = _pool(12)
+    ref = np.array([[lower_bound(hw, layer) for layer in _LAYERS]
+                    for hw in pool])
+    got_np = edp_lower_bounds_batch(
+        hw_bound_vecs(pool), layer_bound_vecs(_LAYERS), layer_caps(_LAYERS))
+    got_jax = edp_lower_bounds_device(pool, _LAYERS)
+    assert ref.shape == got_np.shape == got_jax.shape
+    np.testing.assert_allclose(got_np, ref, rtol=1e-12)
+    np.testing.assert_allclose(got_jax, ref, rtol=1e-9)
+    assert np.isfinite(ref).all() and (ref > 0).all()
+
+
+def test_edp_lower_bounds_wrapper_matches_batch():
+    pool = _pool(5, seed=3)
+    layers = _LAYERS[:4]
+    np.testing.assert_allclose(
+        edp_lower_bounds(pool, layers),
+        edp_lower_bounds_batch(hw_bound_vecs(pool), layer_bound_vecs(layers),
+                               layer_caps(layers)),
+        rtol=0)
+
+
+def test_empty_pool_device_bounds():
+    out = edp_lower_bounds_device([], _LAYERS[:2])
+    assert out.shape == (0, 2)
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_bound_sound_on_random_valid_mappings(seed):
+    """The contract the gate rests on: for every valid mapping m on
+    (hw, layer), lower_bound(hw, layer) <= evaluate(hw, m, layer).edp.  A
+    seeded corpus of constraint-aware random mappings over a mixed pool --
+    any violation here would make pruning unsound, so no tolerance beyond
+    f64 roundoff."""
+    rng = np.random.default_rng(seed)
+    checked = 0
+    for hw in _pool(4, seed=seed + 10):
+        for layer in _LAYERS[::3]:
+            lb = lower_bound(hw, layer)
+            for _ in range(6):
+                m = constrained_random_mapping(rng, hw, layer)
+                if not mapping_is_valid(m, hw, layer)[0]:
+                    continue
+                ev = evaluate(hw, m, layer)
+                assert ev.valid
+                assert lb <= ev.edp * (1 + 1e-12), (
+                    f"bound {lb} exceeds true EDP {ev.edp} on {layer}")
+                checked += 1
+    assert checked > 40  # the corpus actually exercised the contract

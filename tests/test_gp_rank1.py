@@ -1,0 +1,131 @@
+"""Incremental (rank-1) GP posteriors (ISSUE 6): `GP.append_observation`
+folds one observation into the posterior by an O(n^2) Cholesky border update
+with frozen hyperparameters.  The contract is exact parity with
+`GP.with_data` -- the refit-from-scratch reference that rebuilds the padded
+state from the same (params, data) -- to <= 1e-8, including across padding
+bucket boundaries (where the append path must repad and refactorize), plus
+the `fit_tol` gradient-norm early exit (0.0 = the historical fixed-length
+fit, bit-for-bit)."""
+
+import numpy as np
+import pytest
+
+from repro.core import GP, bo_maximize
+from repro.core.gp import _bucket
+
+from test_gp_bo import _QuadraticSpace
+
+
+def _data(n, d=3, seed=0):
+    rng = np.random.default_rng(seed)
+    X = rng.uniform(-1, 1, size=(n, d))
+    y = np.sin(2 * X[:, 0]) + 0.5 * X[:, 1] ** 2 + 0.1 * X[:, 2]
+    return X, y
+
+
+def _grid(m=40, d=3, seed=99):
+    return np.random.default_rng(seed).uniform(-1.2, 1.2, size=(m, d))
+
+
+@pytest.mark.parametrize("kind", ["linear", "se"])
+@pytest.mark.parametrize("noisy", [True, False])
+def test_append_matches_with_data(kind, noisy):
+    """Appending observations one at a time matches the frozen-hyperparameter
+    rebuild on the full dataset to <= 1e-8, for both kernels and both noise
+    models."""
+    X, y = _data(12)
+    Xn, yn = _data(3, seed=7)
+    gp = GP(kind=kind, noisy=noisy).fit(X, y)
+    for x, v in zip(Xn, yn):
+        gp = gp.append_observation(x, float(v))
+    ref = gp.with_data(np.vstack([X, Xn]), np.concatenate([y, yn]))
+    Xs = _grid()
+    mu_a, var_a = gp.posterior(Xs)
+    mu_r, var_r = ref.posterior(Xs)
+    np.testing.assert_allclose(mu_a, mu_r, atol=1e-8, rtol=1e-8)
+    np.testing.assert_allclose(var_a, var_r, atol=1e-8, rtol=1e-8)
+
+
+def test_append_across_bucket_boundary():
+    """n = bucket size: the next append overflows the padded buffers, forcing
+    the repad + refactorize path -- parity must survive the crossing."""
+    n = 8
+    assert _bucket(n) == n  # the fit lands exactly on a bucket boundary
+    X, y = _data(n)
+    Xn, yn = _data(4, seed=11)
+    gp = GP().fit(X, y)
+    for x, v in zip(Xn, yn):
+        gp = gp.append_observation(x, float(v))
+    assert gp._state[1].shape[0] == _bucket(n + 4)  # repadded to 16
+    ref = gp.with_data(np.vstack([X, Xn]), np.concatenate([y, yn]))
+    Xs = _grid()
+    np.testing.assert_allclose(gp.posterior(Xs)[0], ref.posterior(Xs)[0],
+                               atol=1e-8, rtol=1e-8)
+
+
+def test_fit_discards_incremental_factor():
+    """A full refit re-learns hyperparameters, so any cached incremental
+    factor must be invalidated -- posteriors drop back to the factor-free
+    path."""
+    X, y = _data(10)
+    gp = GP().fit(X, y)
+    assert gp._fac is None  # strictly opt-in: fitting alone caches nothing
+    gp = gp.append_observation(X[0] + 0.05, float(y[0]))
+    assert gp._fac is not None
+    gp.fit(X, y)
+    assert gp._fac is None
+
+
+def test_fit_tol_zero_matches_default_fit():
+    """fit_tol=0.0 takes the fixed-length scan -- the pre-tol fit byte for
+    byte: identical hyperparameters, identical posterior."""
+    X, y = _data(14)
+    base = GP().fit(X, y)
+    tol0 = GP(fit_tol=0.0).fit(X, y)
+    for k in base.params:
+        np.testing.assert_array_equal(np.asarray(base.params[k]),
+                                      np.asarray(tol0.params[k]))
+    Xs = _grid()
+    np.testing.assert_array_equal(base.posterior(Xs)[0], tol0.posterior(Xs)[0])
+
+
+def test_fit_tol_early_exit_still_fits():
+    """A loose tolerance stops the Adam loop early: the fit is cheaper but
+    still a real fit -- the posterior mean tracks the data about as well as
+    the full-length fit does."""
+    X, y = _data(20)
+    full = GP().fit(X, y)
+    early = GP(fit_tol=0.5).fit(X, y)
+    mu_f, _ = full.posterior(X)
+    mu_e, _ = early.posterior(X)
+    mse_f = float(np.mean((mu_f - y) ** 2))
+    mse_e = float(np.mean((mu_e - y) ** 2))
+    assert np.isfinite(mse_e)
+    assert mse_e <= max(4 * mse_f, 0.05)
+
+
+def test_bo_with_rank1_updates_runs_and_is_monotone():
+    """`gp_rank1=True` keeps the surrogate's data current between aligned
+    refits; the loop completes with a monotone incumbent history and finds a
+    comparable optimum on the synthetic problem."""
+    space = _QuadraticSpace()
+    r = bo_maximize(space, n_trials=30, n_warmup=8, pool_size=40,
+                    surrogate="gp_se", seed=0, gp_refit_every=4,
+                    gp_rank1=True)
+    assert len(r.history) == 30
+    assert all(b >= a for a, b in zip(r.history, r.history[1:]))
+    assert np.isfinite(r.best_value)
+    assert r.best_value > -0.5  # near the quadratic's optimum, like the default
+
+
+def test_bo_rank1_matches_default_at_refit_every_one():
+    """With a refit every trial the incremental factor is rebuilt from a
+    fresh fit each time, so gp_rank1 cannot change any selection: the runs
+    are bit-identical."""
+    space = _QuadraticSpace()
+    a = bo_maximize(space, n_trials=25, n_warmup=8, pool_size=40,
+                    surrogate="gp_se", seed=3, gp_rank1=False)
+    b = bo_maximize(space, n_trials=25, n_warmup=8, pool_size=40,
+                    surrogate="gp_se", seed=3, gp_rank1=True)
+    assert np.array_equal(a.history, b.history)
+    assert a.best_value == b.best_value

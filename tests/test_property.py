@@ -121,3 +121,35 @@ def test_data_pipeline_deterministic(step):
     assert np.array_equal(b1["labels"], b2["labels"])
     # labels are tokens shifted by one
     assert np.array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])
+
+@given(st.integers(0, 2**32 - 1), st.sampled_from(sorted(PAPER_WORKLOADS)),
+       st.sampled_from([168, 256]))
+@settings(max_examples=40, deadline=None)
+def test_edp_lower_bound_sound_and_vectorized_parity(seed, layer_name, num_pes):
+    """ISSUE 6 bound-and-prune contract, randomized: on a random valid
+    (hardware, mapping) pair the EDP lower bound never exceeds the true
+    evaluated EDP, and the vectorized twins (NumPy batch and the jitted JAX
+    dispatch) agree with the scalar reference on that same (hw, layer)."""
+    from repro.timeloop.batch import edp_lower_bounds_batch
+    from repro.timeloop.batch_jax import edp_lower_bounds_device
+    from repro.timeloop.bounds import (hw_bound_vecs, layer_bound_vecs,
+                                       layer_caps, lower_bound)
+
+    layer = PAPER_WORKLOADS[layer_name]
+    rng = np.random.default_rng(seed)
+    hw = sample_hardware(rng, num_pes=num_pes)
+    if not hw_is_valid(hw)[0]:
+        return  # structurally invalid draw: nothing to bound
+    lb = lower_bound(hw, layer)
+    assert np.isfinite(lb) and lb > 0
+    # both vectorized backends reproduce the scalar bound
+    vec = edp_lower_bounds_batch(hw_bound_vecs([hw]), layer_bound_vecs([layer]),
+                                 layer_caps([layer]))[0, 0]
+    dev = edp_lower_bounds_device([hw], [layer])[0, 0]
+    assert abs(vec - lb) <= 1e-12 * lb
+    assert abs(dev - lb) <= 1e-9 * lb
+    # soundness against the scalar evaluator on a random valid mapping
+    m = constrained_random_mapping(rng, hw, layer)
+    if mapping_is_valid(m, hw, layer)[0]:
+        ev = evaluate(hw, m, layer)
+        assert lb <= ev.edp * (1 + 1e-12)

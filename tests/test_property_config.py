@@ -8,9 +8,9 @@ import json
 
 from hypothesis_support import config_dicts, given, not_in, settings, st
 
-from repro.core import (ACQUISITIONS, BACKENDS, STRATEGIES, SURROGATES,
-                        CodesignConfig, EngineConfig, HWSearchConfig,
-                        SWSearchConfig)
+from repro.core import (ACQUISITIONS, BACKENDS, PRUNE_MODES, STRATEGIES,
+                        SURROGATES, CodesignConfig, EngineConfig,
+                        HWSearchConfig, SWSearchConfig)
 
 import pytest
 
@@ -71,6 +71,41 @@ def test_invalid_spec_k_rejected(bad):
 def test_invalid_elite_k_rejected(bad):
     with pytest.raises(ValueError, match="elite_k"):
         SWSearchConfig(elite_k=bad)
+
+
+@given(not_in(PRUNE_MODES))
+@settings(max_examples=25, deadline=None)
+def test_invalid_prune_mode_rejected(bad):
+    """prune must be one of PRUNE_MODES -- any other string raises loudly."""
+    with pytest.raises(ValueError, match="prune"):
+        HWSearchConfig(prune=bad)
+
+
+@given(st.one_of(st.integers(max_value=0), st.booleans(),
+                 st.floats(max_value=0.0, allow_nan=False),
+                 st.just(float("nan")), st.text(max_size=4)))
+@settings(max_examples=30, deadline=None)
+def test_invalid_prune_margin_rejected(bad):
+    """prune_margin must be a real number > 0: zero/negative, bools, NaN and
+    strings all raise at construction."""
+    with pytest.raises(ValueError, match="prune_margin"):
+        HWSearchConfig(prune_margin=bad)
+
+
+@given(st.sampled_from(PRUNE_MODES),
+       st.floats(0.125, 4.0, allow_nan=False, allow_infinity=False),
+       st.booleans())
+@settings(max_examples=20, deadline=None)
+def test_prune_and_rank1_round_trip(mode, margin, rank1):
+    """The pruning + rank-1 toggles survive the JSON round-trip like every
+    other field -- `run.py --config` surfaces them via from_dict."""
+    cfg = CodesignConfig(hw=HWSearchConfig(prune=mode, prune_margin=margin),
+                         engine=EngineConfig(gp_rank1_updates=rank1))
+    back = CodesignConfig.from_json(cfg.to_json())
+    assert back == cfg
+    assert back.hw.prune == mode
+    assert back.hw.prune_margin == margin
+    assert back.engine.gp_rank1_updates == rank1
 
 
 @given(st.sampled_from(["probe_fanout", "speculative"]))

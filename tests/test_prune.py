@@ -1,0 +1,196 @@
+"""Bound-gated pruning (ISSUE 6): `prune="safe"` must not change WHAT the
+nested search finds -- the gate only swaps provably-doomed inner searches for
+censored bound certificates.  Pinned at three levels:
+
+  * golden: a safe run reproduces the same checked-in golden record that
+    `tests/test_golden.py` pins for the default (`prune="off"`) path, on all
+    four seed workloads -- bit-identical designs, EDPs and trial counts;
+  * unit: the gate closure's contract -- fires only past the incumbent-scaled
+    threshold, censored utilities never beat the incumbent's true utility,
+    fully-cached probes and warmup (no incumbent) always pass, the margin
+    scales under "aggressive", and the stats counters track it;
+  * e2e invariants on runs where the gate actually fires: the reported winner
+    is always a TRUE evaluation (its per-layer mappings are real and re-sum
+    to the reported EDP) and `best_value` matches it -- a censored
+    observation can never be reported as the best.
+"""
+
+import dataclasses
+import hashlib
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import (CodesignConfig, CodesignEngine, EngineConfig,
+                        HWSearchConfig, SWSearchConfig)
+from repro.timeloop import MODEL_LAYERS, evaluate, eyeriss_168
+from repro.timeloop.bounds import lower_bound
+
+from test_golden import GOLDEN_PATH, MODELS, _canonical, _config
+
+
+def _prune_config(model: str, prune: str, **hw_over) -> CodesignConfig:
+    cfg = _config(model)
+    return dataclasses.replace(
+        cfg, hw=dataclasses.replace(cfg.hw, prune=prune, **hw_over))
+
+
+# --- golden parity ----------------------------------------------------------------
+
+
+@pytest.mark.e2e
+@pytest.mark.parametrize("model", MODELS)
+def test_safe_prune_matches_golden(model):
+    """`prune="safe"` reproduces the exact golden record the default path is
+    pinned to: same winning design hash, same best EDP, same trial count."""
+    result = CodesignEngine(_prune_config(model, "safe")).run(
+        MODEL_LAYERS[model])
+    got = {
+        "design_sha256": hashlib.sha256(
+            _canonical(result).encode()).hexdigest(),
+        "best_log10_edp": round(float(np.log10(result.best_model_edp)), 6),
+        "n_trials": len(result.hw_result.history),
+    }
+    goldens = json.loads(GOLDEN_PATH.read_text())
+    assert got == goldens[model], (
+        f"prune='safe' diverged from the golden (= prune='off') on {model!r}")
+
+
+@pytest.mark.e2e
+def test_off_vs_safe_full_equality():
+    """Beyond the golden hash: the full outer history, points and best value
+    are bit-equal off vs safe at the golden budgets."""
+    layers = MODEL_LAYERS["dqn"]
+    a = CodesignEngine(_prune_config("dqn", "off")).run(layers)
+    b = CodesignEngine(_prune_config("dqn", "safe")).run(layers)
+    assert a.best_hw == b.best_hw
+    assert a.best_model_edp == b.best_model_edp
+    assert a.best_mappings == b.best_mappings
+    assert np.array_equal(a.hw_result.history, b.hw_result.history)
+    assert a.hw_result.points == b.hw_result.points
+
+
+# --- gate unit contract -----------------------------------------------------------
+
+
+def _gate_engine(prune="safe", prune_margin=1.0) -> CodesignEngine:
+    eng = CodesignEngine(CodesignConfig(
+        hw=HWSearchConfig(prune=prune, prune_margin=prune_margin),
+        engine=EngineConfig(backend="numpy")))
+    eng._layers = list(MODEL_LAYERS["dqn"])
+    eng.stats = {"spec_evaluated": 0, "spec_hits": 0, "prune_considered": 0,
+                 "prune_pruned": 0, "probes_gated": 0}
+    return eng
+
+
+def _bound_sum(eng, hw) -> float:
+    return sum(lower_bound(hw, layer) for layer in eng._layers)
+
+
+def test_gate_off_is_none():
+    eng = _gate_engine("off")
+    assert eng._make_probe_gate({"edp": 1.0}) is None
+    assert eng._make_prune_fn({"edp": 1.0}) is None
+    assert not eng.probe_doomed(eyeriss_168())  # no gate installed
+
+
+def test_gate_censors_doomed_probe_and_counts():
+    eng = _gate_engine("safe")
+    hw = eyeriss_168()
+    s = _bound_sum(eng, hw)
+    best = {"edp": s / 2}  # incumbent strictly beats the probe's bound
+    gate = eng._gate = eng._make_probe_gate(best)
+    censored = gate(hw)
+    assert censored == -float(np.log10(s))
+    # the censored utility can never displace the incumbent's true utility
+    assert censored < -np.log10(best["edp"])
+    assert eng.stats["probes_gated"] == 1
+    # count=False (the fan-out filter's path) reports without counting
+    assert gate(hw, count=False) == censored
+    assert eng.stats["probes_gated"] == 1
+    assert eng.probe_doomed(hw)
+
+
+def test_gate_passes_warmup_viable_and_cached():
+    eng = _gate_engine("safe")
+    hw = eyeriss_168()
+    s = _bound_sum(eng, hw)
+    # warmup: no incumbent yet
+    assert eng._make_probe_gate({"edp": np.inf})(hw) is None
+    # viable: the bound does not rule the probe out
+    assert eng._make_probe_gate({"edp": s * 2})(hw) is None
+    # fully cached: the search is already paid for, use the true value
+    gate = eng._make_probe_gate({"edp": s / 2})
+    for layer in eng._layers:
+        eng.cache[(hw, layer)] = (None, float("inf"))
+    assert gate(hw) is None
+    assert eng.stats["probes_gated"] == 0
+
+
+def test_aggressive_margin_scales_gate_threshold():
+    """A probe gated under "safe" (bound > incumbent) survives an
+    "aggressive" margin that moves the threshold past its bound."""
+    hw = eyeriss_168()
+    safe = _gate_engine("safe")
+    s = _bound_sum(safe, hw)
+    best = {"edp": s / 2}  # bound = 2x incumbent
+    assert safe._make_probe_gate(best)(hw) is not None
+    loose = _gate_engine("aggressive", prune_margin=4.0)  # threshold 2x bound
+    assert loose._make_probe_gate(best)(hw) is None
+    tight = _gate_engine("aggressive", prune_margin=0.25)
+    assert tight._make_probe_gate(best)(hw) is not None
+
+
+def test_prune_fn_filters_pool_keeps_lowest_bound():
+    """The aggressive pool hook drops bound-dominated candidates, never
+    empties the pool, and tracks the counters."""
+    eng = _gate_engine("aggressive", prune_margin=1.0)
+    rng = np.random.default_rng(0)
+    from repro.core.hwspace import HardwareSpace
+    pool = HardwareSpace(num_pes=168).sample_pool(rng, 6)
+    prune = eng._make_prune_fn({"edp": np.inf})
+    assert prune(pool) == pool  # warmup: nothing to bound against
+    assert eng.stats["prune_considered"] == 0
+    sums = [_bound_sum(eng, hw) for hw in pool]
+    # incumbent below every bound: everything is doomed, the guard keeps
+    # exactly the lowest-bound candidate
+    prune = eng._make_prune_fn({"edp": min(sums) / 2})
+    kept = prune(pool)
+    assert kept == [pool[int(np.argmin(sums))]]
+    assert eng.stats["prune_considered"] == len(pool)
+    assert eng.stats["prune_pruned"] == len(pool) - 1
+
+
+# --- e2e invariants when the gate fires -------------------------------------------
+
+
+def _run_gated(prune: str, **hw_over):
+    cfg = CodesignConfig(
+        sw=SWSearchConfig(n_trials=10, n_warmup=5, pool_size=15),
+        hw=HWSearchConfig(n_trials=8, n_warmup=2, pool_size=12,
+                          prune=prune, **hw_over),
+        engine=EngineConfig(backend="numpy"),
+        seed=0)
+    eng = CodesignEngine(cfg)
+    return eng.run(MODEL_LAYERS["dqn"])
+
+
+def test_aggressive_gate_fires_and_winner_is_true_evaluation():
+    """With a sub-1 margin the gate censors aggressively -- yet the reported
+    winner is always a true evaluation: real per-layer mappings whose scalar
+    re-evaluation sums to the reported EDP, and `best_value` matches it
+    (censored observations are clamped below every true incumbent)."""
+    res = _run_gated("aggressive", prune_margin=1e-3)
+    assert res.stats["probes_gated"] > 0
+    assert res.stats["pruned_fraction"] > 0  # the pool hook engaged too
+    assert np.isfinite(res.best_model_edp)
+    total = 0.0
+    for layer in MODEL_LAYERS["dqn"]:
+        m = res.best_mappings[layer.name]
+        ev = evaluate(res.best_hw, m, layer)
+        assert ev.valid
+        total += ev.edp
+    assert total == pytest.approx(res.best_model_edp, rel=1e-12)
+    assert res.hw_result.best_value == pytest.approx(
+        -np.log10(res.best_model_edp), rel=1e-12)

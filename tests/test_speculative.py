@@ -219,4 +219,6 @@ def test_non_speculative_strategies_report_zero_spec_stats():
     r = CodesignEngine(spec_config("layer_batched",
                                    backend="numpy")).run(MODEL_LAYERS["dqn"])
     assert r.stats == {"spec_evaluated": 0, "spec_hits": 0,
-                       "spec_hit_rate": 0.0}
+                       "spec_hit_rate": 0.0,
+                       "prune_considered": 0, "prune_pruned": 0,
+                       "pruned_fraction": 0.0, "probes_gated": 0}
