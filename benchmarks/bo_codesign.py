@@ -436,6 +436,85 @@ def prune_speedup(models=(("dqn", 40), ("mlp", 100)), n_hw: int = 50,
     return out
 
 
+def service_speedup(models=("dqn", "mlp", "dqn", "mlp", "dqn", "mlp"),
+                    n_hw: int = 6, n_sw: int = 25, seed: int = 0,
+                    reps: int = 2) -> dict:
+    """Co-design-as-a-service throughput: N concurrent requests through the
+    `CodesignService` (cross-request stacked dispatch fusion) vs the same N
+    requests served one standalone `CodesignEngine.run` at a time -- the
+    ISSUE-7 "requests/min" capability.
+
+    Per-request results are bit-identical on both sides (parity asserted on
+    every run and recorded), so the ratio isolates what the service fuses:
+    each tick, every live session's pending inner searches run as ONE stacked
+    `bo_maximize_many` instead of N separate dispatch chains.  `n_sw=25`
+    keeps every stacked fit inside the Cholesky regime where fusion is exact.
+
+    A second, untimed-cold / timed-warm pass exercises the persistent design
+    store: the warm service run must perform ZERO inner searches (all (hw,
+    layer) results replay from disk) -- `*_warm_store_misses` is the health
+    signal and `*_warm_s` the replay latency.  Timing protocol matches
+    `layer_batch_speedup`: interleaved reps, per-side minimum, jit caches
+    warmed untimed by one full pass per side."""
+    import shutil
+    import tempfile
+
+    from repro.core.config import ServiceConfig
+    from repro.service import CodesignService, ServiceRequest
+
+    out: dict = {"requests": list(models), "n_hw": n_hw, "n_sw": n_sw,
+                 "reps": reps}
+    for backend in ("numpy", "jax"):
+        cfgs = [bench_config(model, n_hw, n_sw, seed=seed + i, backend=backend)
+                for i, model in enumerate(models)]
+
+        def sequential():
+            return [CodesignEngine(c).run(MODEL_LAYERS[m])
+                    for m, c in zip(models, cfgs)]
+
+        def service(store_dir=None):
+            svc = CodesignService(ServiceConfig(max_slots=len(models),
+                                                store_dir=store_dir))
+            rids = [svc.submit(ServiceRequest(layers=tuple(MODEL_LAYERS[m]),
+                                              config=c))
+                    for m, c in zip(models, cfgs)]
+            responses = svc.run()
+            return [responses[rid].result for rid in rids]
+
+        seq_results = sequential()  # warm jit caches / one-time imports
+        svc_results = service()
+        parity = all(
+            a.best_model_edp == b.best_model_edp and a.best_hw == b.best_hw
+            for a, b in zip(seq_results, svc_results))
+        times: dict[str, list[float]] = {"sequential": [], "service": []}
+        for _ in range(reps):
+            for name, fn in (("sequential", sequential),
+                             ("service", service)):
+                t0 = time.perf_counter()
+                fn()
+                times[name].append(time.perf_counter() - t0)
+        seq_s, svc_s = min(times["sequential"]), min(times["service"])
+        out[f"{backend}_sequential_s"] = round(seq_s, 3)
+        out[f"{backend}_service_s"] = round(svc_s, 3)
+        out[f"{backend}_speedup"] = round(seq_s / svc_s, 2)
+        out[f"{backend}_rpm"] = round(len(models) / svc_s * 60.0, 1)
+        out[f"{backend}_sequential_rpm"] = round(len(models) / seq_s * 60.0, 1)
+        out[f"{backend}_parity"] = parity
+
+        # warm-store replay: cold pass populates, warm pass must not search
+        store_dir = tempfile.mkdtemp(prefix="bench_design_store_")
+        try:
+            service(store_dir=store_dir)  # cold, untimed
+            t0 = time.perf_counter()
+            warm_results = service(store_dir=store_dir)
+            out[f"{backend}_warm_s"] = round(time.perf_counter() - t0, 3)
+            out[f"{backend}_warm_store_misses"] = sum(
+                r.stats["store_misses"] for r in warm_results)
+        finally:
+            shutil.rmtree(store_dir, ignore_errors=True)
+    return out
+
+
 def run(n_hw: int = 12, n_sw: int = 60, seeds=(0,), quiet: bool = False,
         collect: dict | None = None, backend: str | None = None,
         gp_refit_every: int = 1, config: CodesignConfig | None = None):
@@ -475,7 +554,8 @@ def _finite(x: float):
 
 def print_speedups(eng: dict, e2e: dict, lb: dict | None = None,
                    pf: dict | None = None, spec: dict | None = None,
-                   prune: dict | None = None) -> None:
+                   prune: dict | None = None,
+                   svc: dict | None = None) -> None:
     """CSV lines for the engine/e2e speedup records (shared with run.py)."""
     for name, r in eng["layers"].items():
         print(f"engine,{name},scalar={r['scalar_s']}s,"
@@ -524,6 +604,20 @@ def print_speedups(eng: dict, e2e: dict, lb: dict | None = None,
                   f"jax_safe={r['jax_safe_s']}s,"
                   f"jax_speedup={r['jax_speedup']}x,"
                   f"jax_gated={r['jax_probes_gated']}")
+    if svc is not None:
+        print(f"service,{len(svc['requests'])}req,"
+              f"numpy_seq={svc['numpy_sequential_s']}s,"
+              f"numpy_service={svc['numpy_service_s']}s,"
+              f"numpy_speedup={svc['numpy_speedup']}x,"
+              f"numpy_rpm={svc['numpy_rpm']},"
+              f"numpy_parity={svc['numpy_parity']},"
+              f"numpy_warm={svc['numpy_warm_s']}s,"
+              f"numpy_warm_misses={svc['numpy_warm_store_misses']},"
+              f"jax_seq={svc['jax_sequential_s']}s,"
+              f"jax_service={svc['jax_service_s']}s,"
+              f"jax_speedup={svc['jax_speedup']}x,"
+              f"jax_rpm={svc['jax_rpm']},"
+              f"jax_parity={svc['jax_parity']}")
 
 
 if __name__ == "__main__":
@@ -546,7 +640,8 @@ if __name__ == "__main__":
         print_speedups(engine_speedup(), e2e_speedup(), layer_batch_speedup(),
                        probe_fanout_speedup(), speculative_speedup(),
                        prune_speedup(models=(("dqn", 20), ("mlp", 25)),
-                                     n_hw=16, reps=1))
+                                     n_hw=16, reps=1),
+                       service_speedup(reps=1))
     elif args.paper:
         run(n_hw=50, n_sw=250, seeds=(0, 1, 2), backend=args.backend,
             gp_refit_every=args.gp_refit_every)

@@ -39,6 +39,12 @@ ratios are as robust as the hot-path ones:
                                       budgets; the record also carries the
                                       probes-gated count per backend)
     prune_e2e.models.*.jax_speedup   (annotating only, like jax_speedup)
+    service_e2e.numpy_speedup        (gating: N fused concurrent co-design
+                                      requests through the CodesignService vs
+                                      the same N served sequentially; the
+                                      record also carries requests/min and
+                                      the warm-store replay time)
+    service_e2e.jax_speedup          (annotating only, like jax_speedup)
 
 A missing/invalid previous record is not an error -- first runs and artifact
 expiry just skip the gate with a notice.  Records written before a metric
@@ -141,13 +147,16 @@ def main() -> int:
         ("speculative.jax_speedup", None, False),
         ("prune.numpy_speedup", None, True),
         ("prune.jax_speedup", None, False),
+        ("service.numpy_speedup", None, True),
+        ("service.jax_speedup", None, False),
     ):
         if extract is None:
             section, metric = key.split(".", 1)
             section = {"layer_batch": "layer_batch_e2e",
                        "probe_fanout": "probe_fanout_e2e",
                        "speculative": "speculative_e2e",
-                       "prune": "prune_e2e"}[section]
+                       "prune": "prune_e2e",
+                       "service": "service_e2e"}[section]
             olds = _section_speedups(old, section, metric)
             news = _section_speedups(new, section, metric)
         else:

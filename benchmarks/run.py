@@ -84,7 +84,10 @@ def main() -> None:
     print("# bound-gated pruning (prune=safe) vs speculative alone "
           "(paper-scale outer budget, per backend)")
     prune = bo_codesign.prune_speedup()
-    bo_codesign.print_speedups(eng, e2e, lbe, pfe, spec, prune)
+    print("# co-design service -- fused concurrent requests vs sequential "
+          "standalone (per backend)")
+    svc = bo_codesign.service_speedup()
+    bo_codesign.print_speedups(eng, e2e, lbe, pfe, spec, prune, svc)
 
     print("# Fig. 5b/5c -- surrogate/acquisition + lambda ablations")
     bo_ablation.run(n_trials=250 if args.paper else 80,
@@ -103,6 +106,7 @@ def main() -> None:
         collect["probe_fanout_e2e"] = pfe
         collect["speculative_e2e"] = spec
         collect["prune_e2e"] = prune
+        collect["service_e2e"] = svc
         collect["backend"] = backend
         collect["paper_budgets"] = bool(args.paper)
         collect["total_s"] = round(total, 1)

@@ -8,6 +8,13 @@ Layout:
 
 On a real multi-host cluster each host writes only the shards it owns (the
 `process_index` filter below); on one host it degenerates to a full save.
+
+Concurrent saves into one directory are safe: each save stages into a unique
+temp directory (never a shared `<step>.tmp` name two writers would collide
+on), publishes the step directory and the LATEST pointer with `os.replace`
+under a per-directory lock, and LATEST only ever moves forward -- a slow
+writer finishing an old step cannot point LATEST at it after a newer step
+landed.
 """
 
 from __future__ import annotations
@@ -15,10 +22,16 @@ from __future__ import annotations
 import json
 import os
 import shutil
+import tempfile
 import threading
 
 import jax
 import numpy as np
+
+# Serializes the publish step (step-dir + LATEST rename) across threads of
+# this process; cross-process writers are already safe through os.replace,
+# the lock additionally keeps LATEST monotone among our own threads.
+_publish_lock = threading.Lock()
 
 
 def _leaf_paths(tree):
@@ -32,25 +45,36 @@ def _leaf_paths(tree):
 
 def save(directory: str, step: int, state) -> str:
     """Synchronous checkpoint save; returns the step directory."""
+    os.makedirs(directory, exist_ok=True)
     step_dir = os.path.join(directory, f"step_{step:08d}")
-    tmp_dir = step_dir + ".tmp"
-    os.makedirs(tmp_dir, exist_ok=True)
-    manifest = {"step": step, "leaves": []}
-    for i, (path, leaf) in enumerate(_leaf_paths(state)):
-        arr = np.asarray(jax.device_get(leaf))
-        fname = f"leaf_{i:05d}.npy"
-        np.save(os.path.join(tmp_dir, fname), arr)
-        manifest["leaves"].append(
-            {"path": path, "file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype)})
-    with open(os.path.join(tmp_dir, "manifest.json"), "w") as f:
-        json.dump(manifest, f)
-    if os.path.exists(step_dir):
-        shutil.rmtree(step_dir)
-    os.rename(tmp_dir, step_dir)
-    latest_tmp = os.path.join(directory, "LATEST.tmp")
-    with open(latest_tmp, "w") as f:
-        f.write(os.path.basename(step_dir))
-    os.rename(latest_tmp, os.path.join(directory, "LATEST"))  # atomic pointer
+    # Unique staging dir per save call: concurrent saves of the SAME step
+    # (async writer + a late sync save, or two engines sharing a directory)
+    # must not interleave writes into one tmp dir.
+    tmp_dir = tempfile.mkdtemp(prefix=f"step_{step:08d}.tmp.", dir=directory)
+    try:
+        manifest = {"step": step, "leaves": []}
+        for i, (path, leaf) in enumerate(_leaf_paths(state)):
+            arr = np.asarray(jax.device_get(leaf))
+            fname = f"leaf_{i:05d}.npy"
+            np.save(os.path.join(tmp_dir, fname), arr)
+            manifest["leaves"].append(
+                {"path": path, "file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype)})
+        with open(os.path.join(tmp_dir, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        with _publish_lock:
+            if os.path.exists(step_dir):
+                shutil.rmtree(step_dir)
+            os.rename(tmp_dir, step_dir)
+            current = latest_step(directory)
+            if current is None or step >= current:  # LATEST is monotone
+                fd, latest_tmp = tempfile.mkstemp(
+                    prefix="LATEST.tmp.", dir=directory)
+                with os.fdopen(fd, "w") as f:
+                    f.write(os.path.basename(step_dir))
+                os.replace(latest_tmp, os.path.join(directory, "LATEST"))
+    except BaseException:
+        shutil.rmtree(tmp_dir, ignore_errors=True)
+        raise
     return step_dir
 
 
@@ -89,11 +113,18 @@ def restore(directory: str, like, step: int | None = None):
 
 class AsyncCheckpointer:
     """Fire-and-forget saves on a writer thread; at most one in flight
-    (training never blocks on I/O unless a save is already running)."""
+    (training never blocks on I/O unless a save is already running).
+
+    Use as a context manager (or call `close()`): the writer thread is
+    non-daemon work in flight, and `close()` joins it so process exit never
+    truncates a checkpoint mid-write.  A save that raised on the thread
+    re-raises from the next `save()`/`wait()`/`close()` call instead of
+    vanishing."""
 
     def __init__(self, directory: str):
         self.directory = directory
         self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
         self.last_saved: int | None = None
 
     def save(self, step: int, state):
@@ -101,13 +132,35 @@ class AsyncCheckpointer:
         host_state = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
 
         def work():
-            save(self.directory, step, host_state)
-            self.last_saved = step
+            try:
+                save(self.directory, step, host_state)
+                self.last_saved = step
+            except BaseException as e:  # surfaced by the next wait()
+                self._error = e
 
-        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread = threading.Thread(target=work)
         self._thread.start()
 
     def wait(self):
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            error, self._error = self._error, None
+            raise error
+
+    def close(self):
+        """Join any in-flight save; the checkpointer stays usable after."""
+        self.wait()
+
+    def __enter__(self) -> "AsyncCheckpointer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        # Don't mask an exception already unwinding with a writer error.
+        if exc[0] is None:
+            self.close()
+        else:
+            if self._thread is not None:
+                self._thread.join()
+                self._thread = None

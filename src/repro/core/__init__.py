@@ -9,18 +9,21 @@ The search surface is the typed config API (`repro.core.config`):
 from repro.core.config import (ACQUISITIONS, BACKENDS, PALLAS_MODES,
                                PRUNE_MODES, STRATEGIES, SURROGATES,
                                CodesignConfig, EngineConfig, HWSearchConfig,
-                               SearchConfig, SWSearchConfig,
+                               SearchConfig, ServiceConfig, SWSearchConfig,
                                config_from_legacy_kwargs)
+from repro.core.cache import LRUCache, SlotCache, counters_snapshot
 from repro.core.gp import GP, GPClassifier, GPClassifierStack, GPStack
 from repro.core.acquisition import expected_improvement, lcb, make_acquisition
-from repro.core.bo import BOResult, bo_maximize, bo_maximize_many, score_topk
+from repro.core.bo import (BOLoop, BOResult, bo_maximize, bo_maximize_many,
+                           score_topk)
 from repro.core.swspace import LayerStackSpace, SoftwareSpace, fanout_spaces
 from repro.core.hwspace import HardwareSpace
 from repro.core.nested import (PROBE_STRATEGIES, CoDesignResult,
                                CodesignEngine, LayerBatchedProbes,
                                ProbeFanoutProbes, ProbeStrategy,
-                               SequentialProbes, SpeculativeProbes, codesign,
-                               optimize_software, optimize_software_fanout,
+                               SearchSession, SequentialProbes,
+                               SpeculativeProbes, codesign, optimize_software,
+                               optimize_software_fanout,
                                optimize_software_many)
 from repro.core.baselines import random_search, relax_round_bo, tvm_style_search
 from repro.core.trees import GradientBoostedTrees, RandomForestSurrogate
@@ -36,8 +39,12 @@ __all__ = [
     "EngineConfig",
     "HWSearchConfig",
     "SearchConfig",
+    "ServiceConfig",
     "SWSearchConfig",
     "config_from_legacy_kwargs",
+    "LRUCache",
+    "SlotCache",
+    "counters_snapshot",
     "GP",
     "GPClassifier",
     "GPClassifierStack",
@@ -45,6 +52,7 @@ __all__ = [
     "expected_improvement",
     "lcb",
     "make_acquisition",
+    "BOLoop",
     "BOResult",
     "bo_maximize",
     "bo_maximize_many",
@@ -56,6 +64,7 @@ __all__ = [
     "PROBE_STRATEGIES",
     "CoDesignResult",
     "CodesignEngine",
+    "SearchSession",
     "LayerBatchedProbes",
     "ProbeFanoutProbes",
     "ProbeStrategy",

@@ -155,6 +155,467 @@ def _resolve_search_config(config, overrides) -> SearchConfig:
     return dataclasses.replace(cfg, **overrides) if overrides else cfg
 
 
+class BOLoop:
+    """One constrained-BO search as an explicit, resumable state machine.
+
+    `bo_maximize(...)` is exactly `BOLoop(...).run()`: all of the loop's
+    state -- RNG stream, observation history, surrogate/classifier, frozen
+    pool window, elite carry-forward -- lives on the instance instead of in
+    closure variables, and each trial splits into two halves:
+
+      `plan()`    advance the loop up to (but not through) its next
+                  evaluation: refit the surrogate if due, sample the trial's
+                  candidate pool, score it, and return a *plan* describing
+                  what the trial is about to evaluate.  All RNG consumption
+                  happens here.  Idempotent: repeated calls return the same
+                  pending plan.
+      `commit()`  execute the pending plan: evaluate the selected
+                  candidate(s), record observations, update elites, fire the
+                  speculative-prefetch hook and the callback.
+
+    The split is what lets an external scheduler (the co-design service)
+    inspect what a session is about to evaluate -- `plan()["pool"]` /
+    the scored plan's ranked utilities -- and pre-fill evaluation caches
+    across many concurrent loops before any of them commits.  `plan()`
+    followed by `commit()` performs the exact statement sequence of the
+    historical inline loop, so stepped execution is bit-identical to
+    `run()`, which is bit-identical to the pre-refactor `bo_maximize`.
+
+    `snapshot()`/`restore()` round-trip the loop through a plain dict (no
+    live plan may be outstanding): the RNG state, histories, incumbent, and
+    frozen window are copied, and the surrogate/classifier are *refit* from
+    the recorded fit boundary on restore (model fits are deterministic given
+    their data, so the restored loop continues bit-identically).
+    """
+
+    def __init__(
+        self,
+        space,
+        config: SearchConfig | None = None,
+        *,
+        noisy: bool = False,
+        seed: int = 0,
+        gp_refit_every: int = 1,
+        gp_rank1: bool = False,
+        callback: Callable[[int, BOResult], None] | None = None,
+        **overrides,
+    ):
+        cfg = _resolve_search_config(config, overrides)
+        self.space = space
+        self.cfg = cfg
+        self.noisy = noisy
+        self.seed = seed
+        self.gp_refit_every = gp_refit_every
+        self.gp_rank1 = gp_rank1
+        self.callback = callback
+        self.elite_k = getattr(cfg, "elite_k", 0)
+        self.rng = np.random.default_rng(seed)
+        self._acq = make_acquisition(cfg.acquisition, cfg.lam)
+        self._acq_dev = None
+
+        # Candidate carry-forward (cfg.elite_k): the previous scored trial's
+        # top candidates that were NOT evaluated survive into the next
+        # trial's pool, so the acquisition optimizer has memory across pool
+        # resamples.  Only list pools support appending (the hardware space;
+        # packed MappingBatch pools of the software loop keep elite_k = 0).
+        self._elites: list = []
+        self._observed: set = set()
+        # Frozen refit windows: see the comment at `plan`.
+        self._can_freeze = gp_refit_every > 1 and bool(
+            getattr(space, "supports_pool_freeze", False))
+
+        self._X_feas: list[np.ndarray] = []
+        self._y_feas: list[float] = []
+        self._X_all: list[np.ndarray] = []
+        self._feas_all: list[bool] = []
+        self.result = BOResult(None, -np.inf, [], [], [])
+
+        self._use_batch = bool(getattr(space, "supports_batch", False))
+        # Device-resident scoring needs the GP surrogate (the tree surrogate
+        # is host-only) and a space whose feature arrays live on device.
+        self._use_device = (
+            self._use_batch
+            and bool(getattr(space, "supports_device", False))
+            and cfg.surrogate in ("gp_linear", "gp_se")
+        )
+
+        self._model = None
+        self._classifier = None
+        self._window_pool = None
+        self._window_feats = None
+        # Fit boundary bookkeeping for snapshot/restore: the trial index and
+        # history lengths of the most recent refit (restore refits from
+        # exactly this prefix, then replays any rank-1 appends).
+        self._fit: dict | None = None
+        self._warmed = min(cfg.n_warmup, cfg.n_trials) == 0
+        self._plan: dict | None = None
+
+    # --- state queries -----------------------------------------------------------
+
+    @property
+    def done(self) -> bool:
+        return self._warmed and len(self.result.history) >= self.cfg.n_trials
+
+    # --- inner helpers (the historical closures, verbatim) -----------------------
+
+    def _observe(self, point, feats=None, outcome=None) -> None:
+        space, result = self.space, self.result
+        feats = space.features(point) if feats is None else feats
+        value, feasible = space.evaluate(point) if outcome is None else outcome
+        if self.elite_k or self._can_freeze:
+            # evaluated points never re-enter as elites, and frozen window
+            # pools mask them out
+            self._observed.add(point)
+        self._X_all.append(feats)
+        self._feas_all.append(feasible)
+        result.points.append(point)
+        if feasible:
+            self._X_feas.append(feats)
+            self._y_feas.append(value)
+            if value > result.best_value:
+                result.best_value, result.best_point = value, point
+            result.values.append(value)
+        else:
+            result.n_infeasible += 1
+            result.values.append(-np.inf)
+        result.history.append(result.best_value)
+
+    def _rank1_update(self, feat_row) -> None:
+        """`gp_rank1`: fold the observation just recorded into the surrogate's
+        posterior by an O(n^2) incremental Cholesky update (frozen
+        hyperparameters; see `GP.append_observation`) instead of leaving the
+        posterior stale until the next aligned refit.  GP surrogates only --
+        the tree surrogate has no incremental form -- and only feasible
+        observations (infeasible ones never enter the objective GP's data)."""
+        if not (self.gp_rank1 and isinstance(self._model, GP)):
+            return
+        v = self.result.values[-1]
+        if np.isfinite(v):
+            self._model.append_observation(np.asarray(feat_row, np.float64), v)
+
+    def _update_elites(self, pool, utility, i_best) -> None:
+        elite_k, observed = self.elite_k, self._observed
+        if not (elite_k and isinstance(pool, list)):
+            return
+        new: list = []
+        winner = pool[i_best]
+        for i in score_topk(utility, elite_k + 1 + len(observed)):
+            p = pool[int(i)]
+            # compare by value, not index: a duplicate of the just-evaluated
+            # winner elsewhere in the pool must not survive as an elite
+            if p == winner or p in observed or p in new:
+                continue
+            new.append(p)
+            if len(new) == elite_k:
+                break
+        self._elites[:] = new
+
+    def _sample_valid(self, max_attempts: int = 20_000):
+        """Rejection sampling against the *known* input constraints (paper
+        §3.4): invalid draws are rejected before any evaluation."""
+        for _ in range(max_attempts):
+            p = self.space.sample(self.rng)
+            if self.space.is_valid(p):
+                return p
+        raise InfeasibleSpace(getattr(self.space, "name", "space"))
+
+    def _sample_valid_pool(self, n):
+        """Input-valid candidate pool as a packed batch (batched protocol)."""
+        pool = self.space.sample_pool(self.rng, n)
+        if pool is None:
+            raise InfeasibleSpace(getattr(self.space, "name", "space"))
+        return pool
+
+    def _maybe_refit(self, t: int) -> None:
+        surrogate = self.cfg.surrogate
+        if not (len(self._y_feas) >= 2
+                and (self._model is None or t % self.gp_refit_every == 0)):
+            return
+        Xf = np.stack(self._X_feas)
+        yf = np.asarray(self._y_feas)
+        if surrogate == "gp_linear":
+            self._model = GP(kind="linear", noisy=self.noisy).fit(Xf, yf)
+        elif surrogate == "gp_se":
+            self._model = GP(kind="se", noisy=self.noisy).fit(Xf, yf)
+        elif surrogate == "rf":
+            self._model = RandomForestSurrogate(seed=self.seed + t).fit(Xf, yf)
+        else:
+            raise ValueError(surrogate)
+        if any(not f for f in self._feas_all):
+            self._classifier = GPClassifier().fit(
+                np.stack(self._X_all), np.asarray(self._feas_all))
+        else:
+            self._classifier = None
+        self._window_pool = self._window_feats = None  # new posterior -> new pool
+        self._fit = {"t": t, "n_feas": len(self._y_feas),
+                     "n_all": len(self._X_all),
+                     "had_clf": self._classifier is not None}
+
+    # --- plan / commit -----------------------------------------------------------
+
+    def plan(self) -> dict | None:
+        """Advance to the next evaluation boundary and describe it; None when
+        the loop is done.  Plan kinds:
+
+          {"kind": "warmup", "pool": candidates}  the warmup block (evaluated
+              in one batch at commit)
+          {"kind": "sample", "t", "point"}        a pre-surrogate trial (not
+              enough feasible data yet): one random candidate
+          {"kind": "scored", "t", "pool", "utility", "k_cap", ...}  a scored
+              trial: the acquisition-ranked pool; commit evaluates
+              `pool[argmax(utility)]`
+
+        All RNG consumption and surrogate refits happen here; the pending
+        plan is cached until `commit()` consumes it, so external schedulers
+        may inspect it (and pre-fill evaluation caches) without perturbing
+        the trajectory."""
+        if self._plan is not None:
+            return self._plan
+        if self.done:
+            return None
+        if not self._warmed:
+            n_warm = min(self.cfg.n_warmup, self.cfg.n_trials)
+            if self._use_batch:
+                pool = self._sample_valid_pool(n_warm)
+            else:
+                pool = [self._sample_valid() for _ in range(n_warm)]
+            self._plan = {"kind": "warmup", "pool": pool}
+            return self._plan
+
+        t = len(self.result.history)
+        self._maybe_refit(t)
+
+        if self._model is None:  # not enough feasible data yet -> keep sampling
+            point = (self._sample_valid_pool(1)[0] if self._use_batch
+                     else self._sample_valid())
+            self._plan = {"kind": "sample", "t": t, "point": point}
+            return self._plan
+
+        if self._use_device:
+            # Fused pool scoring: features, GP posterior, acquisition, and
+            # P(feasible) chain on-device; one scalar index comes back (at
+            # commit).
+            if self._acq_dev is None:
+                self._acq_dev = make_acquisition_device(
+                    self.cfg.acquisition, self.cfg.lam)
+            pool = self._sample_valid_pool(self.cfg.pool_size)
+            feats_dev = self.space.features_batch_device(pool)
+            mu, var = self._model.posterior_device(feats_dev)
+            utility = self._acq_dev(mu, var, self.result.best_value)
+            if self._classifier is not None:
+                utility = utility * self._classifier.prob_feasible_device(
+                    feats_dev)
+            self._plan = {"kind": "scored", "t": t, "pool": pool,
+                          "feats": None, "feats_dev": feats_dev,
+                          "utility": utility, "k_cap": None, "device": True}
+            return self._plan
+
+        # Pool freezing (gp_refit_every > 1 on spaces that opt in through
+        # `supports_pool_freeze`, e.g. the hardware space): within one refit
+        # window the posterior is fixed, so the window IS one batched
+        # acquisition round -- the pool sampled at the refit trial is reused
+        # (frozen) by the window's remaining trials with consumed candidates
+        # masked out, making the window consume the posterior's top
+        # candidates one per trial (the q-batch semantics of BoTorch/
+        # Vizier-style parallel suggestion, and what makes speculative
+        # prefetches exact for rank-stable acquisitions like LCB).  Spaces
+        # without the opt-in (all software spaces; `bo_maximize_many`'s
+        # lockstep contract covers them) keep per-trial resampling, and only
+        # list pools -- hashable candidate identity -- can freeze.
+        frozen = self._window_pool is not None
+        if frozen and all(p in self._observed for p in self._window_pool):
+            # The window outlived its pool (stride > unobserved candidates):
+            # resample instead of re-evaluating masked-out points forever.
+            self._window_pool = self._window_feats = None
+            frozen = False
+        if frozen:
+            pool, feats = self._window_pool, self._window_feats
+        elif self._use_batch:
+            pool = self._sample_valid_pool(self.cfg.pool_size)
+            feats = self.space.features_batch(pool)
+            if self._elites and isinstance(pool, list):
+                # Reuse the base pool's packed features (memoized per pool
+                # identity by the space) and append the handful of elite rows
+                # scalar-wise -- same column math, so the stacked matrix is
+                # bit-identical to featurizing pool + elites from scratch.
+                pool = pool + self._elites
+                feats = np.vstack(
+                    [feats] + [self.space.features(p)[None]
+                               for p in self._elites])
+        else:
+            pool = [self._sample_valid() for _ in range(self.cfg.pool_size)]
+            if self._elites:
+                pool = pool + self._elites
+            feats = np.stack([self.space.features(p) for p in pool])
+        if self._can_freeze and not frozen and isinstance(pool, list):
+            self._window_pool, self._window_feats = pool, feats
+        mu, var = self._model.posterior(feats)
+        utility = self._acq(mu, var, self.result.best_value)
+        if self._classifier is not None:
+            # prob_feasible returns a host array; the asarray keeps the
+            # boundary explicit so the acquisition math never silently
+            # promotes to device arrays.
+            utility = utility * np.asarray(
+                self._classifier.prob_feasible(feats))
+        if frozen:
+            # Already-consumed candidates leave the frozen window pool.
+            utility = np.where([p in self._observed for p in pool],
+                               -np.inf, utility)
+        k_cap = None
+        if self._window_pool is not None:
+            # Windowed mode: only the window's remaining trials (this one
+            # included) can consume a speculated candidate -- wider
+            # speculation is guaranteed waste.
+            next_refit = (t // self.gp_refit_every + 1) * self.gp_refit_every
+            k_cap = min(next_refit, self.cfg.n_trials) - t
+        self._plan = {"kind": "scored", "t": t, "pool": pool, "feats": feats,
+                      "utility": utility, "k_cap": k_cap, "device": False}
+        return self._plan
+
+    def commit(self) -> None:
+        """Execute the pending plan (see `plan`): evaluate, observe, update
+        elites, fire the prefetch hook and callback."""
+        plan = self._plan
+        assert plan is not None, "commit() without a pending plan()"
+        self._plan = None
+        if plan["kind"] == "warmup":
+            pool = plan["pool"]
+            n_warm = len(pool)
+            self._warmed = True
+            if self._use_batch and n_warm:
+                warm_feats = self.space.features_batch(pool)
+                warm_vals, warm_feas = self.space.evaluate_batch(pool)
+                for i in range(n_warm):
+                    self._observe(pool[i], feats=warm_feats[i],
+                                  outcome=(warm_vals[i], bool(warm_feas[i])))
+            else:
+                for p in pool:
+                    self._observe(p)
+            return
+        t = plan["t"]
+        if plan["kind"] == "sample":
+            self._observe(plan["point"])
+            if self.callback:
+                self.callback(t, self.result)
+            return
+        pool, utility = plan["pool"], plan["utility"]
+        if plan["device"]:
+            import jax.numpy as jnp
+
+            _prefetch_topk(self.space, pool, utility)
+            i_best = int(jnp.argmax(utility))
+            feat_row = np.asarray(plan["feats_dev"][i_best], dtype=np.float64)
+            self._observe(pool[i_best], feats=feat_row)
+            self._rank1_update(feat_row)
+        else:
+            _prefetch_topk(self.space, pool, utility, k_cap=plan["k_cap"])
+            i_best = int(np.argmax(utility))
+            self._update_elites(pool, utility, i_best)
+            self._observe(pool[i_best], feats=plan["feats"][i_best])
+            self._rank1_update(plan["feats"][i_best])
+        if self.callback:
+            self.callback(t, self.result)
+
+    def step(self) -> bool:
+        """plan + commit one stage (the warmup block counts as one stage,
+        then one trial per call); returns True while the loop has more work."""
+        if self.done:
+            return False
+        self.plan()
+        self.commit()
+        return not self.done
+
+    def run(self) -> BOResult:
+        while self.step():
+            pass
+        return self.result
+
+    # --- snapshot / restore ------------------------------------------------------
+
+    def snapshot(self) -> dict:
+        """Resumable state as a plain (picklable) dict.  Must be taken at an
+        evaluation boundary -- no pending plan (its RNG draws are already
+        consumed and cannot be replayed)."""
+        if self._plan is not None:
+            raise RuntimeError(
+                "snapshot() with a pending plan: commit() it first")
+        r = self.result
+        return {
+            "rng": self.rng.bit_generator.state,
+            "X_feas": [np.array(x) for x in self._X_feas],
+            "y_feas": list(self._y_feas),
+            "X_all": [np.array(x) for x in self._X_all],
+            "feas_all": list(self._feas_all),
+            "result": {
+                "best_point": r.best_point, "best_value": r.best_value,
+                "history": list(r.history), "values": list(r.values),
+                "points": list(r.points), "n_infeasible": r.n_infeasible,
+            },
+            "elites": list(self._elites),
+            "observed": list(self._observed),
+            "window_pool": (None if self._window_pool is None
+                            else list(self._window_pool)),
+            "window_feats": (None if self._window_feats is None
+                             else np.array(self._window_feats)),
+            "fit": None if self._fit is None else dict(self._fit),
+            "warmed": self._warmed,
+        }
+
+    def restore(self, snap: dict) -> "BOLoop":
+        """Load a `snapshot()` into this (freshly constructed, same space +
+        config) loop.  The surrogate/classifier are refit from the recorded
+        fit boundary's data prefix -- fits are deterministic, so the refit
+        model matches the snapshotted one -- and rank-1 appends recorded
+        after that boundary are replayed."""
+        self.rng.bit_generator.state = snap["rng"]
+        self._X_feas = [np.array(x) for x in snap["X_feas"]]
+        self._y_feas = list(snap["y_feas"])
+        self._X_all = [np.array(x) for x in snap["X_all"]]
+        self._feas_all = list(snap["feas_all"])
+        rs = snap["result"]
+        self.result = BOResult(
+            best_point=rs["best_point"], best_value=rs["best_value"],
+            history=list(rs["history"]), values=list(rs["values"]),
+            points=list(rs["points"]), n_infeasible=rs["n_infeasible"])
+        self._elites = list(snap["elites"])
+        self._observed = set(snap["observed"])
+        self._window_pool = (None if snap["window_pool"] is None
+                             else list(snap["window_pool"]))
+        self._window_feats = (None if snap["window_feats"] is None
+                              else np.array(snap["window_feats"]))
+        self._fit = None if snap["fit"] is None else dict(snap["fit"])
+        self._warmed = snap["warmed"]
+        self._plan = None
+        self._model = self._classifier = None
+        if self._fit is not None:
+            fit = self._fit
+            n = fit["n_feas"]
+            Xf = np.stack(self._X_feas[:n])
+            yf = np.asarray(self._y_feas[:n])
+            surrogate = self.cfg.surrogate
+            if surrogate == "gp_linear":
+                self._model = GP(kind="linear", noisy=self.noisy).fit(Xf, yf)
+            elif surrogate == "gp_se":
+                self._model = GP(kind="se", noisy=self.noisy).fit(Xf, yf)
+            elif surrogate == "rf":
+                self._model = RandomForestSurrogate(
+                    seed=self.seed + fit["t"]).fit(Xf, yf)
+            else:
+                raise ValueError(surrogate)
+            if fit["had_clf"]:
+                self._classifier = GPClassifier().fit(
+                    np.stack(self._X_all[:fit["n_all"]]),
+                    np.asarray(self._feas_all[:fit["n_all"]]))
+            # Feasible observations recorded after the fit boundary were
+            # appended through rank-1 updates (only scored trials run once a
+            # model exists, and only under gp_rank1): replay them.
+            if self.gp_rank1 and isinstance(self._model, GP):
+                for row, v in zip(self._X_feas[n:], self._y_feas[n:]):
+                    self._model.append_observation(
+                        np.asarray(row, np.float64), float(v))
+        return self
+
+
 def bo_maximize(
     space,
     config: SearchConfig | None = None,
@@ -175,234 +636,10 @@ def bo_maximize(
                 gp_refit_every=gp_refit_every, gp_rank1=gp_rank1,
                 callback=callback,
             )
-    n_trials, n_warmup, pool_size = cfg.n_trials, cfg.n_warmup, cfg.pool_size
-    acquisition, lam, surrogate = cfg.acquisition, cfg.lam, cfg.surrogate
-    elite_k = getattr(cfg, "elite_k", 0)
-    rng = np.random.default_rng(seed)
-    acq = make_acquisition(acquisition, lam)
-    acq_dev = None
-
-    # Candidate carry-forward (cfg.elite_k): the previous scored trial's top
-    # candidates that were NOT evaluated survive into the next trial's pool,
-    # so the acquisition optimizer has memory across pool resamples.  Only
-    # list pools support appending (the hardware space; packed MappingBatch
-    # pools of the software loop keep elite_k = 0).
-    elites: list = []
-    observed: set = set()
-    # Frozen refit windows: see the comment at the trial loop.
-    can_freeze = gp_refit_every > 1 and bool(
-        getattr(space, "supports_pool_freeze", False))
-
-    def update_elites(pool, utility, i_best) -> None:
-        if not (elite_k and isinstance(pool, list)):
-            return
-        new: list = []
-        winner = pool[i_best]
-        for i in score_topk(utility, elite_k + 1 + len(observed)):
-            p = pool[int(i)]
-            # compare by value, not index: a duplicate of the just-evaluated
-            # winner elsewhere in the pool must not survive as an elite
-            if p == winner or p in observed or p in new:
-                continue
-            new.append(p)
-            if len(new) == elite_k:
-                break
-        elites[:] = new
-
-    X_feas: list[np.ndarray] = []
-    y_feas: list[float] = []
-    X_all: list[np.ndarray] = []
-    feas_all: list[bool] = []
-    result = BOResult(None, -np.inf, [], [], [])
-
-    use_batch = bool(getattr(space, "supports_batch", False))
-    # Device-resident scoring needs the GP surrogate (the tree surrogate is
-    # host-only) and a space whose feature arrays already live on device.
-    use_device = (
-        use_batch
-        and bool(getattr(space, "supports_device", False))
-        and surrogate in ("gp_linear", "gp_se")
-    )
-
-    def observe(point, feats=None, outcome=None):
-        feats = space.features(point) if feats is None else feats
-        value, feasible = space.evaluate(point) if outcome is None else outcome
-        if elite_k or can_freeze:
-            # evaluated points never re-enter as elites, and frozen window
-            # pools mask them out
-            observed.add(point)
-        X_all.append(feats)
-        feas_all.append(feasible)
-        result.points.append(point)
-        if feasible:
-            X_feas.append(feats)
-            y_feas.append(value)
-            if value > result.best_value:
-                result.best_value, result.best_point = value, point
-            result.values.append(value)
-        else:
-            result.n_infeasible += 1
-            result.values.append(-np.inf)
-        result.history.append(result.best_value)
-
-    def rank1_update(feat_row) -> None:
-        """`gp_rank1`: fold the observation just recorded into the surrogate's
-        posterior by an O(n^2) incremental Cholesky update (frozen
-        hyperparameters; see `GP.append_observation`) instead of leaving the
-        posterior stale until the next aligned refit.  GP surrogates only --
-        the tree surrogate has no incremental form -- and only feasible
-        observations (infeasible ones never enter the objective GP's data)."""
-        if not (gp_rank1 and isinstance(model, GP)):
-            return
-        v = result.values[-1]
-        if np.isfinite(v):
-            model.append_observation(np.asarray(feat_row, np.float64), v)
-
-    def sample_valid(max_attempts: int = 20_000):
-        """Rejection sampling against the *known* input constraints (paper §3.4):
-        invalid draws are rejected before any evaluation."""
-        for _ in range(max_attempts):
-            p = space.sample(rng)
-            if space.is_valid(p):
-                return p
-        raise InfeasibleSpace(getattr(space, "name", "space"))
-
-    def sample_valid_pool(n):
-        """Input-valid candidate pool as a packed batch (batched protocol)."""
-        pool = space.sample_pool(rng, n)
-        if pool is None:
-            raise InfeasibleSpace(getattr(space, "name", "space"))
-        return pool
-
-    # --- warmup ---------------------------------------------------------------
-    n_warm = min(n_warmup, n_trials)
-    if use_batch and n_warm:
-        warm = sample_valid_pool(n_warm)
-        warm_feats = space.features_batch(warm)
-        warm_vals, warm_feas = space.evaluate_batch(warm)
-        for i in range(n_warm):
-            observe(warm[i], feats=warm_feats[i],
-                    outcome=(warm_vals[i], bool(warm_feas[i])))
-    else:
-        for _ in range(n_warm):
-            observe(sample_valid())
-
-    model = None
-    classifier = None
-    # Pool freezing (gp_refit_every > 1 on spaces that opt in through
-    # `supports_pool_freeze`, e.g. the hardware space): within one refit
-    # window the posterior is fixed, so the window IS one batched acquisition
-    # round -- the pool sampled at the refit trial is reused (frozen) by the
-    # window's remaining trials with already-consumed candidates masked out,
-    # making the window consume the posterior's top candidates one per trial
-    # (the q-batch semantics of BoTorch/Vizier-style parallel suggestion,
-    # and what makes speculative prefetches exact for rank-stable
-    # acquisitions like LCB).  Spaces without the opt-in (all software
-    # spaces; `bo_maximize_many`'s lockstep contract covers them) keep
-    # per-trial resampling, and only list pools -- hashable candidate
-    # identity -- can freeze.
-    window_pool = None
-    window_feats = None
-    for t in range(len(result.history), n_trials):
-        refit = len(y_feas) >= 2 and (model is None or t % gp_refit_every == 0)
-        if refit:
-            Xf = np.stack(X_feas)
-            yf = np.asarray(y_feas)
-            if surrogate == "gp_linear":
-                model = GP(kind="linear", noisy=noisy).fit(Xf, yf)
-            elif surrogate == "gp_se":
-                model = GP(kind="se", noisy=noisy).fit(Xf, yf)
-            elif surrogate == "rf":
-                model = RandomForestSurrogate(seed=seed + t).fit(Xf, yf)
-            else:
-                raise ValueError(surrogate)
-            if any(not f for f in feas_all):
-                classifier = GPClassifier().fit(np.stack(X_all), np.asarray(feas_all))
-            else:
-                classifier = None
-            window_pool = window_feats = None  # new posterior -> new pool
-
-        if model is None:  # not enough feasible data yet -> keep sampling
-            observe(sample_valid_pool(1)[0] if use_batch else sample_valid())
-            if callback:
-                callback(t, result)
-            continue
-
-        if use_device:
-            # Fused pool scoring: features, GP posterior, acquisition, and
-            # P(feasible) chain on-device; one scalar index comes back.
-            import jax.numpy as jnp
-
-            if acq_dev is None:
-                acq_dev = make_acquisition_device(acquisition, lam)
-            pool = sample_valid_pool(pool_size)
-            feats_dev = space.features_batch_device(pool)
-            mu, var = model.posterior_device(feats_dev)
-            utility = acq_dev(mu, var, result.best_value)
-            if classifier is not None:
-                utility = utility * classifier.prob_feasible_device(feats_dev)
-            _prefetch_topk(space, pool, utility)
-            i_best = int(jnp.argmax(utility))
-            feat_row = np.asarray(feats_dev[i_best], dtype=np.float64)
-            observe(pool[i_best], feats=feat_row)
-            rank1_update(feat_row)
-            if callback:
-                callback(t, result)
-            continue
-
-        frozen = window_pool is not None
-        if frozen and all(p in observed for p in window_pool):
-            # The window outlived its pool (stride > unobserved candidates):
-            # resample instead of re-evaluating masked-out points forever.
-            window_pool = window_feats = None
-            frozen = False
-        if frozen:
-            pool, feats = window_pool, window_feats
-        elif use_batch:
-            pool = sample_valid_pool(pool_size)
-            feats = space.features_batch(pool)
-            if elites and isinstance(pool, list):
-                # Reuse the base pool's packed features (memoized per pool
-                # identity by the space) and append the handful of elite rows
-                # scalar-wise -- same column math, so the stacked matrix is
-                # bit-identical to featurizing pool + elites from scratch.
-                pool = pool + elites
-                feats = np.vstack(
-                    [feats] + [space.features(p)[None] for p in elites])
-        else:
-            pool = [sample_valid() for _ in range(pool_size)]
-            if elites:
-                pool = pool + elites
-            feats = np.stack([space.features(p) for p in pool])
-        if can_freeze and not frozen and isinstance(pool, list):
-            window_pool, window_feats = pool, feats
-        mu, var = model.posterior(feats)
-        utility = acq(mu, var, result.best_value)
-        if classifier is not None:
-            # prob_feasible returns a host array; the asarray keeps the
-            # boundary explicit so the acquisition math never silently
-            # promotes to device arrays.
-            utility = utility * np.asarray(classifier.prob_feasible(feats))
-        if frozen:
-            # Already-consumed candidates leave the frozen window pool.
-            utility = np.where([p in observed for p in pool], -np.inf, utility)
-        if window_pool is not None:
-            # Windowed mode: only the window's remaining trials (this one
-            # included) can consume a speculated candidate -- wider
-            # speculation is guaranteed waste.
-            next_refit = (t // gp_refit_every + 1) * gp_refit_every
-            _prefetch_topk(space, pool, utility,
-                           k_cap=min(next_refit, n_trials) - t)
-        else:
-            _prefetch_topk(space, pool, utility)
-        i_best = int(np.argmax(utility))
-        update_elites(pool, utility, i_best)
-        observe(pool[i_best], feats=feats[i_best])
-        rank1_update(feats[i_best])
-        if callback:
-            callback(t, result)
-
-    return result
+    return BOLoop(
+        space, cfg, noisy=noisy, seed=seed, gp_refit_every=gp_refit_every,
+        gp_rank1=gp_rank1, callback=callback,
+    ).run()
 
 
 @dataclasses.dataclass

@@ -183,6 +183,15 @@ class EngineConfig:
                     default: a mid-window posterior update changes frozen-
                     window trajectories (fresher, but not bit-identical to
                     the paper's refit-every-trial schedule).
+    cache_entries   LRU bound on the engine's (hw, layer) -> best-mapping
+                    cache (0 = unbounded, the historical behavior).  Content-
+                    derived probe seeds make eviction result-preserving under
+                    prune="off" (a re-search reproduces the evicted entry
+                    bit-for-bit); with the bound gate on, eviction can change
+                    *when* probes are censored, so bounded runs are only
+                    guaranteed identical to unbounded ones while nothing is
+                    evicted.  Long-lived service processes set this
+                    (`ServiceConfig.cache_entries`).
     """
 
     backend: str | None = None
@@ -193,6 +202,7 @@ class EngineConfig:
     use_cache: bool = True
     pallas_mode: str | None = None
     gp_rank1_updates: bool = False
+    cache_entries: int = 0
 
     def __post_init__(self) -> None:
         validate_choice("backend", self.backend, BACKENDS, optional=True)
@@ -201,6 +211,7 @@ class EngineConfig:
                         optional=True)
         _validate_positive_int("gp_refit_every", self.gp_refit_every)
         _validate_positive_int("hw_gp_refit_every", self.hw_gp_refit_every)
+        _validate_positive_int("cache_entries", self.cache_entries, minimum=0)
         if self.strategy in ("probe_fanout", "speculative") and not self.use_cache:
             raise ValueError(
                 f"strategy={self.strategy!r} requires use_cache=True: the "
@@ -265,6 +276,49 @@ class CodesignConfig:
     @classmethod
     def from_json(cls, s: str) -> "CodesignConfig":
         return cls.from_dict(json.loads(s))
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    """Co-design service driver configuration (`repro.service`).
+
+    max_slots      concurrent search sessions advanced per scheduler tick
+                   (the slot-admission width; queued requests wait for a
+                   free slot, like `launch/serve.py`'s decode batch)
+    fuse           fuse every admitted session's pending inner searches into
+                   ONE cross-request stacked `bo_maximize_many` dispatch per
+                   tick (False: one dispatch per session per tick -- the
+                   ablation baseline; results are identical either way)
+    store_dir      persistent design-store directory (None: no store).  The
+                   store is keyed by content hash of (hw, layer, search
+                   config, probe seed), so hits are exact replays.
+    cache_entries  LRU bound applied to each request's engine (hw, layer)
+                   cache when the request's own `EngineConfig.cache_entries`
+                   is 0 -- long-lived service processes must not grow
+                   memory without bound.
+    """
+
+    max_slots: int = 4
+    fuse: bool = True
+    store_dir: str | None = None
+    cache_entries: int = 65536
+
+    def __post_init__(self) -> None:
+        _validate_positive_int("max_slots", self.max_slots)
+        _validate_positive_int("cache_entries", self.cache_entries, minimum=0)
+        if self.store_dir is not None and not isinstance(self.store_dir, str):
+            raise ValueError(
+                f"store_dir must be a str or None, got {self.store_dir!r}")
+
+    def to_dict(self) -> dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict[str, Any]) -> "ServiceConfig":
+        try:
+            return cls(**d)
+        except TypeError as e:
+            raise ValueError(f"invalid ServiceConfig dict: {e}") from None
 
 
 # --- legacy kwarg surface --------------------------------------------------------

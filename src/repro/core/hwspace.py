@@ -25,6 +25,7 @@ from typing import Callable
 
 import numpy as np
 
+from repro.core.cache import SlotCache
 from repro.timeloop.arch import (HardwareConfig, hw_is_valid, sample_hardware,
                                  sample_hardware_pool)
 
@@ -85,12 +86,14 @@ class HardwareSpace:
     supports_batch: bool = True
 
     def __post_init__(self) -> None:
-        # One-slot pool-identity memo (the `SoftwareSpace._fwd_cache` idiom):
-        # a frozen refit window re-presents the SAME pool object across its
-        # trials, and the prune pass featurizes pools the BO loop featurizes
-        # again -- deriving the packed (n, 11) matrix once per pool object
-        # makes every repeat free.
-        self._feat_cache: tuple[object, np.ndarray] | None = None
+        # Pool-identity memo (the `SoftwareSpace._fwd_cache` idiom): a frozen
+        # refit window re-presents the SAME pool object across its trials,
+        # and the prune pass featurizes pools the BO loop featurizes again --
+        # deriving the packed (n, 11) matrix once per pool object makes every
+        # repeat free.  A bounded, counted SlotCache (capacity 2: the frozen
+        # window's pool plus the freshest draw) so long-lived service
+        # processes never accumulate stale pool arrays.
+        self._feat_cache = SlotCache("hw_feat", capacity=2)
 
     @property
     def feature_dim(self) -> int:
@@ -143,8 +146,9 @@ class HardwareSpace:
     def features_batch(self, pool) -> np.ndarray:
         """(n, 11) feature matrix computed as whole-array column ops, memoized
         per pool identity (see `__post_init__`)."""
-        if self._feat_cache is not None and self._feat_cache[0] is pool:
-            return self._feat_cache[1]
+        cached = self._feat_cache.get(pool)
+        if cached is not None:
+            return cached
         cols = np.array(
             [
                 [hw.pe_mesh_x, hw.pe_mesh_y, hw.gb_mesh_x, hw.gb_mesh_y,
@@ -171,7 +175,7 @@ class HardwareSpace:
             ],
             axis=1,
         )
-        self._feat_cache = (pool, feats)
+        self._feat_cache.put(pool, feats)
         return feats
 
     def evaluate_batch(self, pool) -> tuple[np.ndarray, np.ndarray]:

@@ -50,8 +50,10 @@ from typing import Callable, Sequence
 
 import numpy as np
 
-from repro.core.bo import (BOResult, InfeasibleSpace, _resolve_search_config,
-                           bo_maximize, bo_maximize_many)
+from repro.core.bo import (BOLoop, BOResult, InfeasibleSpace,
+                           _resolve_search_config, bo_maximize,
+                           bo_maximize_many, score_topk)
+from repro.core.cache import LRUCache, counters_snapshot
 from repro.core.config import (CodesignConfig, EngineConfig, SWSearchConfig,
                                config_from_legacy_kwargs)
 from repro.core.hwspace import HardwareSpace
@@ -284,34 +286,8 @@ class ProbeFanoutProbes(LayerBatchedProbes):
 
     name = "probe_fanout"
 
-    def _pending_items(self, engine, cands, *, mark_speculated=False):
-        """(hw, layer) work items still uncached for `cands` (deduplicated,
-        pool order) with their content-derived seeds; `mark_speculated`
-        additionally reports which non-argmax probes contributed items (the
-        speculative-consumption accounting -- entry 0 of `cands` is the work
-        its trial consumes itself)."""
-        items: list[tuple[HardwareConfig, ConvLayer]] = []
-        seeds: list[int] = []
-        speculated: list[HardwareConfig] = []
-        seen: set[HardwareConfig] = set()
-        for rank, hw in enumerate(cands):
-            if hw in seen:
-                continue  # later duplicate -> cache hit at evaluation time
-            seen.add(hw)
-            if engine.probe_doomed(hw):
-                continue  # bound veto: the gate censors it if ever consumed
-            todo = [(hw, layer) for layer in dict.fromkeys(engine._layers)
-                    if (hw, layer) not in engine.cache]
-            if not todo:
-                continue
-            if mark_speculated and rank > 0:
-                speculated.append(hw)
-            items.extend(todo)
-            seeds.extend([engine.probe_seed(hw)] * len(todo))
-        return items, seeds, speculated
-
     def prefetch(self, engine, pool):
-        items, seeds, _ = self._pending_items(engine, pool)
+        items, seeds, _ = engine.pending_items(pool)
         if not items:
             return
         rs = optimize_software_fanout(items, engine.config.sw, seeds=seeds,
@@ -339,8 +315,8 @@ class SpeculativeProbes(ProbeFanoutProbes):
     name = "speculative"
 
     def prefetch_topk(self, engine, cands):
-        items, seeds, speculated = self._pending_items(
-            engine, cands, mark_speculated=True)
+        items, seeds, speculated = engine.pending_items(
+            cands, mark_speculated=True)
         if not items:
             return
         n_layers = len(dict.fromkeys(engine._layers))
@@ -406,8 +382,9 @@ class CodesignEngine:
         self.backend = self.config.engine.resolve_backend()
         self.strategy_name = self.config.engine.resolve_strategy()
         self.strategy = PROBE_STRATEGIES[self.strategy_name]()
-        self.cache: dict[tuple[HardwareConfig, ConvLayer],
-                         tuple[Mapping | None, float]] = {}
+        # LRU-bounded when `engine.cache_entries` > 0 (the service applies its
+        # bound here); 0 keeps the historical unbounded dict behavior.
+        self.cache: LRUCache = LRUCache(self.config.engine.cache_entries)
         self._layers: list[ConvLayer] = []
         self.stats: dict[str, int] = {"spec_evaluated": 0, "spec_hits": 0}
         self._speculated: set[HardwareConfig] = set()
@@ -528,81 +505,241 @@ class CodesignEngine:
         outer loop ever consumes it)."""
         return self._gate is not None and self._gate(hw, count=False) is not None
 
+    def pending_items(self, cands: Sequence[HardwareConfig], *,
+                      mark_speculated: bool = False):
+        """(hw, layer) work items still uncached for `cands` (deduplicated,
+        pool order) with their content-derived seeds; `mark_speculated`
+        additionally reports which non-argmax probes contributed items (the
+        speculative-consumption accounting -- entry 0 of `cands` is the work
+        its trial consumes itself).
+
+        This is THE unit of schedulable inner-search work: the fan-out
+        strategies stack a single trial's items into one multi-run program,
+        and the co-design service (`repro.service`) stacks the items of many
+        concurrent sessions' trials the same way -- content-derived seeds
+        make both result-preserving."""
+        items: list[tuple[HardwareConfig, ConvLayer]] = []
+        seeds: list[int] = []
+        speculated: list[HardwareConfig] = []
+        seen: set[HardwareConfig] = set()
+        for rank, hw in enumerate(cands):
+            if hw in seen:
+                continue  # later duplicate -> cache hit at evaluation time
+            seen.add(hw)
+            if self.probe_doomed(hw):
+                continue  # bound veto: the gate censors it if ever consumed
+            todo = [(hw, layer) for layer in dict.fromkeys(self._layers)
+                    if (hw, layer) not in self.cache]
+            if not todo:
+                continue
+            if mark_speculated and rank > 0:
+                speculated.append(hw)
+            items.extend(todo)
+            seeds.extend([self.probe_seed(hw)] * len(todo))
+        return items, seeds, speculated
+
+    def session(self, layers: Sequence[ConvLayer],
+                hw_callback: Callable[[int, "BOResult"], None] | None = None,
+                ) -> "SearchSession":
+        """Open a resumable `SearchSession` over `layers` (one at a time per
+        engine: the session wires the engine's gate/stats/layer bookkeeping
+        to itself)."""
+        return SearchSession(self, layers, hw_callback=hw_callback)
+
     def run(self, layers: Sequence[ConvLayer],
             hw_callback: Callable[[int, "BOResult"], None] | None = None,
             ) -> CoDesignResult:
-        """Run the nested search over `layers`.  `hw_callback(t, bo_result)`,
-        when given, fires after every outer hardware trial (the `bo_maximize`
-        callback) -- the prune benchmark uses it to timestamp the incumbent
-        trajectory (time-to-quality measurements)."""
-        cfg = self.config
-        self._layers = list(layers)
-        self.stats = {"spec_evaluated": 0, "spec_hits": 0,
-                      "prune_considered": 0, "prune_pruned": 0,
-                      "probes_gated": 0}
-        self._speculated = set()
-        best = {"edp": np.inf, "hw": None, "maps": None, "per_layer": None}
-        gate = self._gate = self._make_probe_gate(best)
+        """Run the nested search over `layers` to completion -- a
+        `SearchSession` stepped straight through (`session()` exposes the
+        stepwise form).  `hw_callback(t, bo_result)`, when given, fires after
+        every outer hardware trial (the `BOLoop` callback) -- the prune
+        benchmark uses it to timestamp the incumbent trajectory
+        (time-to-quality measurements)."""
+        session = self.session(layers, hw_callback=hw_callback)
+        while session.step():
+            pass
+        return session.result()
 
-        def eval_hw(hw: HardwareConfig):
-            if gate is not None:
-                censored = gate(hw)
-                if censored is not None:
-                    return censored, True  # bound veto: no inner search run
-            self.strategy.evaluate_probe(self, hw, self.probe_seed(hw))
-            total_edp = 0.0
-            maps: dict[str, Mapping] = {}
-            per_layer: dict[str, float] = {}
-            for layer in self._layers:
-                m, edp = self.cache.get((hw, layer), (None, float("inf")))
-                if m is None:
-                    return None, False  # unknown constraint: no feasible mapping
-                total_edp += edp
-                maps[layer.name] = m
-                per_layer[layer.name] = edp
-            if total_edp < best["edp"]:
-                best.update(edp=total_edp, hw=hw, maps=maps,
-                            per_layer=per_layer)
-            if cfg.verbose:
-                print(f"  hw {hw.pe_mesh_x}x{hw.pe_mesh_y} "
-                      f"lb=({hw.lb_input},{hw.lb_weight},{hw.lb_output}) "
-                      f"-> model EDP {total_edp:.3e}")
-            return -float(np.log10(total_edp)), True
 
-        spec_k = cfg.hw.spec_k if self.strategy_name == "speculative" else 0
-        space = HardwareSpace(
+class SearchSession:
+    """One nested co-design search as an explicit, resumable state machine.
+
+    Wraps the outer hardware `BOLoop` plus everything `CodesignEngine.run`
+    used to hold in closures: the incumbent (`best`), the bound gate, the
+    probe-strategy hooks, and the per-run stats.  The outer-trial state --
+    GP history, frozen pool window, elite carry-forward, prune gate -- is
+    stepped one trial at a time (`step`), snapshotted (`snapshot`/`restore`),
+    and interleaved with other sessions by the co-design service.
+
+    The scheduling surface is `pending()`: the (hw, layer) inner-search work
+    items the *next* `step()` will need, with their content-derived seeds.
+    An external scheduler may search them by any means (fused across many
+    sessions, served from a persistent store) and pre-fill `engine.cache`;
+    because seeds are content-derived, the session's trajectory is
+    bit-identical whether the work was pre-filled or evaluated inline.
+
+    One live session per engine: constructing a session rebinds the engine's
+    `_layers`/`stats`/`_gate`/`_speculated` bookkeeping (the same reset
+    `run()` historically performed per call).  The (hw, layer) cache is NOT
+    reset -- it persists across sessions by design.
+    """
+
+    def __init__(self, engine: CodesignEngine, layers: Sequence[ConvLayer],
+                 hw_callback: Callable[[int, "BOResult"], None] | None = None):
+        self.engine = engine
+        cfg = engine.config
+        engine._layers = list(layers)
+        engine.stats = {"spec_evaluated": 0, "spec_hits": 0,
+                        "prune_considered": 0, "prune_pruned": 0,
+                        "probes_gated": 0}
+        engine._speculated = set()
+        self.best: dict = {"edp": np.inf, "hw": None, "maps": None,
+                           "per_layer": None}
+        self.gate = engine._gate = engine._make_probe_gate(self.best)
+        self._spec_k = (cfg.hw.spec_k
+                        if engine.strategy_name == "speculative" else 0)
+        self.space = HardwareSpace(
             num_pes=cfg.hw.num_pes,
-            evaluate_fn=eval_hw,
-            prefetch_fn=lambda pool: self.strategy.prefetch(self, pool),
+            evaluate_fn=self._eval_hw,
+            prefetch_fn=lambda pool: engine.strategy.prefetch(engine, pool),
             prefetch_topk_fn=(
-                (lambda cands: self.strategy.prefetch_topk(self, cands))
-                if spec_k > 1 else None),
-            prefetch_topk=spec_k,
-            prune_fn=self._make_prune_fn(best),
+                (lambda cands: engine.strategy.prefetch_topk(engine, cands))
+                if self._spec_k > 1 else None),
+            prefetch_topk=self._spec_k,
+            prune_fn=engine._make_prune_fn(self.best),
         )
-        hw_result = bo_maximize(
-            space, cfg.hw,
+        self.loop = BOLoop(
+            self.space, cfg.hw,
             noisy=True,  # inner search stochasticity (paper §4.2)
             seed=cfg.seed,
             gp_refit_every=cfg.engine.hw_gp_refit_every,
             gp_rank1=cfg.engine.gp_rank1_updates,
             callback=hw_callback,
         )
-        stats = dict(self.stats)
+        self._cache_counts0 = (engine.cache.hits, engine.cache.misses,
+                               engine.cache.evictions)
+        self._feat_counts0 = counters_snapshot()
+
+    def _eval_hw(self, hw: HardwareConfig):
+        engine, best, cfg = self.engine, self.best, self.engine.config
+        if self.gate is not None:
+            censored = self.gate(hw)
+            if censored is not None:
+                return censored, True  # bound veto: no inner search run
+        engine.strategy.evaluate_probe(engine, hw, engine.probe_seed(hw))
+        total_edp = 0.0
+        maps: dict[str, Mapping] = {}
+        per_layer: dict[str, float] = {}
+        for layer in engine._layers:
+            m, edp = engine.cache.get((hw, layer), (None, float("inf")))
+            if m is None:
+                return None, False  # unknown constraint: no feasible mapping
+            total_edp += edp
+            maps[layer.name] = m
+            per_layer[layer.name] = edp
+        if total_edp < best["edp"]:
+            best.update(edp=total_edp, hw=hw, maps=maps, per_layer=per_layer)
+        if cfg.verbose:
+            print(f"  hw {hw.pe_mesh_x}x{hw.pe_mesh_y} "
+                  f"lb=({hw.lb_input},{hw.lb_weight},{hw.lb_output}) "
+                  f"-> model EDP {total_edp:.3e}")
+        return -float(np.log10(total_edp)), True
+
+    @property
+    def done(self) -> bool:
+        return self.loop.done
+
+    def step(self) -> bool:
+        """Advance one outer stage (the warmup block, then one hardware trial
+        per call); returns True while the session has more work."""
+        return self.loop.step()
+
+    def pending(self):
+        """(items, seeds): the uncached (hw, layer) inner searches the next
+        `step()` will evaluate, with their content-derived seeds.  Planning
+        the outer trial to find them consumes the trial's RNG draws, but the
+        plan is cached until `step()` commits it, so calling this is
+        trajectory-neutral.
+
+        Mirrors what each strategy would launch inline: the whole warmup
+        pool's probes, a pre-surrogate trial's sampled probe, or a scored
+        trial's acquisition argmax -- widened to the top-`hw.spec_k`
+        candidates (capped by the frozen window's remaining trials, exactly
+        like `_prefetch_topk`) under the speculative strategy.  Items are
+        filtered through `engine.pending_items`, so cached, duplicate, and
+        bound-doomed probes drop out."""
+        plan = self.loop.plan()
+        if plan is None:
+            return [], []
+        if plan["kind"] == "warmup":
+            cands = list(plan["pool"])
+        elif plan["kind"] == "sample":
+            cands = [plan["point"]]
+        else:
+            k = 1
+            if self._spec_k > 1:
+                k_cap = plan.get("k_cap")
+                k = self._spec_k if k_cap is None else min(self._spec_k, k_cap)
+            idx = score_topk(np.asarray(plan["utility"]), k)
+            cands = [plan["pool"][int(i)] for i in idx]
+        items, seeds, _ = self.engine.pending_items(cands)
+        return items, seeds
+
+    def result(self) -> CoDesignResult:
+        """The session's `CoDesignResult` (final when `done`; the
+        incumbent-so-far otherwise), with the engine + cache accounting for
+        this session folded into `stats`."""
+        engine = self.engine
+        stats = dict(engine.stats)
         stats["spec_hit_rate"] = (
             stats["spec_hits"] / stats["spec_evaluated"]
             if stats["spec_evaluated"] else 0.0)
         stats["pruned_fraction"] = (
             stats["prune_pruned"] / stats["prune_considered"]
             if stats["prune_considered"] else 0.0)
+        h0, m0, e0 = self._cache_counts0
+        stats["cache_hits"] = engine.cache.hits - h0
+        stats["cache_misses"] = engine.cache.misses - m0
+        stats["cache_evictions"] = engine.cache.evictions - e0
+        stats["cache_size"] = len(engine.cache)
+        feat = counters_snapshot()
+        for key in ("hw_feat", "sw_feat", "sw_fwd"):
+            for kind in ("hits", "misses"):
+                name = f"{key}_{kind}"
+                stats[name] = feat.get(name, 0) - self._feat_counts0.get(name, 0)
         return CoDesignResult(
-            best_hw=best["hw"],
-            best_mappings=best["maps"],
-            best_model_edp=best["edp"],
-            hw_result=hw_result,
-            layer_edps=best["per_layer"],
+            best_hw=self.best["hw"],
+            best_mappings=self.best["maps"],
+            best_model_edp=self.best["edp"],
+            hw_result=self.loop.result,
+            layer_edps=self.best["per_layer"],
             stats=stats,
         )
+
+    def snapshot(self) -> dict:
+        """Resumable session state as a plain dict: the outer loop's
+        snapshot, the incumbent, the engine bookkeeping, and the (hw, layer)
+        cache entries (the bound gate consults cache membership, so resuming
+        without them could change when probes are censored)."""
+        return {
+            "loop": self.loop.snapshot(),
+            "best": dict(self.best),
+            "stats": dict(self.engine.stats),
+            "speculated": list(self.engine._speculated),
+            "cache": list(self.engine.cache.items()),
+        }
+
+    def restore(self, snap: dict) -> "SearchSession":
+        """Load a `snapshot()` into this (freshly constructed, same engine
+        config + layers) session.  The incumbent dict is updated in place --
+        the gate/prune/eval closures hold a reference to it."""
+        self.loop.restore(snap["loop"])
+        self.best.update(snap["best"])
+        self.engine.stats = dict(snap["stats"])
+        self.engine._speculated = set(snap["speculated"])
+        for key, value in snap["cache"]:
+            self.engine.cache[key] = value
+        return self
 
 
 def codesign(

@@ -29,6 +29,7 @@ import os
 
 import numpy as np
 
+from repro.core.cache import SlotCache
 from repro.core.config import BACKENDS, PALLAS_MODES, validate_choice
 from repro.timeloop import batch as tlb
 from repro.timeloop.arch import HardwareConfig
@@ -82,22 +83,25 @@ class SoftwareSpace:
         # One fused device program computes validity+EDP+features together, so
         # features_batch / evaluate_batch / features_batch_device on the same
         # pool object must share a single dispatch (the BO warmup calls two of
-        # them back to back).
-        self._fwd_cache: tuple[object, dict] | None = None
-        # NumPy twin of the memo: one-slot pool-identity cache for the packed
-        # feature matrix, so repeat featurizations of the same pool object
-        # (frozen refit windows, outer-loop hooks) are free on either backend.
-        self._np_feat_cache: tuple[object, np.ndarray] | None = None
+        # them back to back).  One slot: the forward dict holds whole-pool
+        # device arrays, so a deeper cache would double peak device memory.
+        self._fwd_cache = SlotCache("sw_fwd", capacity=1)
+        # NumPy twin of the memo: pool-identity cache for the packed feature
+        # matrix, so repeat featurizations of the same pool object (frozen
+        # refit windows, outer-loop hooks) are free on either backend.
+        self._np_feat_cache = SlotCache("sw_feat", capacity=2)
 
     def _forward_jax(self, pool) -> dict:
         # Deferred import: the default NumPy backend must not pay for (or
         # depend on) the jax.experimental.pallas import chain.
         from repro.timeloop import batch_jax as jtlb
 
-        if self._fwd_cache is None or self._fwd_cache[0] is not pool:
-            self._fwd_cache = (pool, jtlb.forward_device(
-                self.hw, pool, self.layer, mode=self.pallas_mode))
-        return self._fwd_cache[1]
+        out = self._fwd_cache.get(pool)
+        if out is None:
+            out = jtlb.forward_device(
+                self.hw, pool, self.layer, mode=self.pallas_mode)
+            self._fwd_cache.put(pool, out)
+        return out
 
     @property
     def feature_dim(self) -> int:
@@ -162,10 +166,10 @@ class SoftwareSpace:
     def features_batch(self, pool: tlb.MappingBatch) -> np.ndarray:
         if self.backend == "jax":
             return np.asarray(self._forward_jax(pool)["features"])
-        if self._np_feat_cache is not None and self._np_feat_cache[0] is pool:
-            return self._np_feat_cache[1]
-        feats = tlb.features_batch(pool, self.hw, self.layer)
-        self._np_feat_cache = (pool, feats)
+        feats = self._np_feat_cache.get(pool)
+        if feats is None:
+            feats = tlb.features_batch(pool, self.hw, self.layer)
+            self._np_feat_cache.put(pool, feats)
         return feats
 
     def evaluate_batch(self, pool: tlb.MappingBatch) -> tuple[np.ndarray, np.ndarray]:

@@ -1,0 +1,24 @@
+"""Co-design as a service (paper workloads, many tenants, one device).
+
+`CodesignService` admits co-design requests (layers + `CodesignConfig`, as
+objects or JSON) into concurrent `SearchSession` slots, fuses their pending
+inner software searches into one cross-request stacked dispatch per tick, and
+persists every finished (hw, layer) search in a content-addressed
+`DesignStore` so overlapping or repeated workloads skip re-searching.
+Per-request results are bit-identical to standalone `CodesignEngine.run`
+(see `repro.service.scheduler` for the two scope notes).
+"""
+
+from repro.core.config import ServiceConfig
+from repro.service.scheduler import (CodesignService, ServiceRequest,
+                                     ServiceResponse)
+from repro.service.store import DesignStore, design_key
+
+__all__ = [
+    "CodesignService",
+    "DesignStore",
+    "ServiceConfig",
+    "ServiceRequest",
+    "ServiceResponse",
+    "design_key",
+]

@@ -1,0 +1,263 @@
+"""Co-design as a service: a request-queue driver over `SearchSession`s.
+
+Clients submit co-design requests (layers + a `CodesignConfig`, as objects or
+JSON); the service admits up to `ServiceConfig.max_slots` of them as live
+`SearchSession`s and advances all of them in lockstep ticks, the slot-admission
+shape of `launch/serve.py`'s decode batch.  Each tick:
+
+  1. admit queued requests into free slots;
+  2. collect every active session's `pending()` work -- the (hw, layer) inner
+     software searches its next outer trial needs, with content-derived seeds;
+  3. resolve what it can from the persistent `DesignStore` (exact replays,
+     keyed by `design_key`), deduplicate identical searches across requests,
+     and fuse the remainder into ONE cross-request stacked
+     `optimize_software_fanout` dispatch per fuse group (requests whose
+     search config + backend agree share a group; `fuse=False` keeps one
+     dispatch per request -- the ablation baseline);
+  4. prefill each owning session's cache with the results, publish them to
+     the store, and `step()` every session one outer trial.
+
+Because probe seeds are content-derived and `SearchSession.pending()` is
+trajectory-neutral (the outer plan is cached until `step()` commits it), a
+request's result is bit-identical to running its engine standalone -- fusion
+and the store move inner-search work across requests and across runs, never
+change it.  Two scope notes: cross-request stacking inherits the stacked GP's
+Cholesky-regime contract (see tests/test_layer_batch.py), and under
+`strategy="sequential"` with `hw.prune != "off"` the standalone path stops a
+probe's per-layer searches at the first infeasible layer while the service
+prefills all of them, which can shift WHEN the bound gate censors -- the
+batched strategies (layer_batched/probe_fanout/speculative) search all layers
+inline too and carry no such caveat.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+
+from repro.core.config import CodesignConfig, ServiceConfig
+from repro.core.nested import (CodesignEngine, CoDesignResult, SearchSession,
+                               _cache_entry, optimize_software_fanout)
+from repro.service.store import DesignStore, design_key
+from repro.timeloop.workloads import MODEL_LAYERS, ConvLayer
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceRequest:
+    """One co-design request: the layers to co-design for and the full search
+    config.  `rid=None` lets the service assign one at submission."""
+
+    layers: tuple[ConvLayer, ...]
+    config: CodesignConfig = dataclasses.field(default_factory=CodesignConfig)
+    rid: str | None = None
+
+    def __post_init__(self) -> None:
+        if not self.layers:
+            raise ValueError("request has no layers")
+        object.__setattr__(self, "layers", tuple(self.layers))
+
+    # --- JSON queue surface -------------------------------------------------------
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ServiceRequest":
+        """`layers` is either a model name from `MODEL_LAYERS` ("dqn") or a
+        list of `ConvLayer` field dicts; `config` a `CodesignConfig` dict
+        (sections may be omitted)."""
+        d = dict(d)
+        layers = d.pop("layers")
+        if isinstance(layers, str):
+            if layers not in MODEL_LAYERS:
+                raise ValueError(f"unknown model {layers!r}; "
+                                 f"known: {sorted(MODEL_LAYERS)}")
+            layers = MODEL_LAYERS[layers]
+        else:
+            layers = [ConvLayer(**ld) if isinstance(ld, dict) else ld
+                      for ld in layers]
+        config = d.pop("config", None)
+        if isinstance(config, dict):
+            config = CodesignConfig.from_dict(config)
+        elif config is None:
+            config = CodesignConfig()
+        rid = d.pop("rid", None)
+        if d:
+            raise ValueError(f"unknown request key(s) {sorted(d)}")
+        return cls(layers=tuple(layers), config=config, rid=rid)
+
+    def to_dict(self) -> dict:
+        return {
+            "rid": self.rid,
+            "layers": [dataclasses.asdict(layer) for layer in self.layers],
+            "config": self.config.to_dict(),
+        }
+
+    @classmethod
+    def from_json(cls, s: str) -> "ServiceRequest":
+        return cls.from_dict(json.loads(s))
+
+    def to_json(self, **json_kw) -> str:
+        json_kw.setdefault("sort_keys", True)
+        return json.dumps(self.to_dict(), **json_kw)
+
+
+@dataclasses.dataclass
+class ServiceResponse:
+    rid: str
+    result: CoDesignResult   # stats carry store_hits/store_misses/latency_s
+    latency_s: float         # admission -> completion wall clock
+    ticks: int               # scheduler ticks the request was live
+
+
+class _Slot:
+    """One admitted request: its engine + live session and per-request
+    accounting."""
+
+    def __init__(self, request: ServiceRequest, engine: CodesignEngine,
+                 session: SearchSession):
+        self.request = request
+        self.engine = engine
+        self.session = session
+        self.t0 = time.perf_counter()
+        self.ticks = 0
+        self.store_hits = 0
+        self.store_misses = 0
+
+
+class CodesignService:
+    """The request-queue driver.  `submit()` requests (objects, dicts, or JSON
+    strings), then `run()` to drain the queue; per-request `ServiceResponse`s
+    come back keyed by rid, each bit-identical to the standalone
+    `CodesignEngine(config).run(layers)` result (see the module docstring for
+    the two scope notes)."""
+
+    def __init__(self, config: ServiceConfig | None = None,
+                 store: DesignStore | None = None):
+        self.config = config if config is not None else ServiceConfig()
+        if store is None and self.config.store_dir is not None:
+            store = DesignStore(self.config.store_dir)
+        self.store = store
+        self._queue: list[ServiceRequest] = []
+        self._slots: list[_Slot] = []
+        self._next_rid = 0
+        # service-level accounting (per-request numbers land in result.stats)
+        self.stats = {"ticks": 0, "fused_dispatches": 0, "fused_items": 0,
+                      "deduped_items": 0}
+
+    def submit(self, request: ServiceRequest | dict | str) -> str:
+        """Enqueue a request (admitted when a slot frees up); returns its rid,
+        assigning `"r<n>"` when the request carries none."""
+        if isinstance(request, str):
+            request = ServiceRequest.from_json(request)
+        elif isinstance(request, dict):
+            request = ServiceRequest.from_dict(request)
+        if request.rid is None:
+            request = dataclasses.replace(request, rid=f"r{self._next_rid}")
+        self._next_rid += 1
+        if any(r.rid == request.rid for r in self._queue) or \
+                any(s.request.rid == request.rid for s in self._slots):
+            raise ValueError(f"duplicate request id {request.rid!r}")
+        self._queue.append(request)
+        return request.rid
+
+    def run(self) -> dict[str, ServiceResponse]:
+        """Drain the queue: tick until every submitted request completed."""
+        responses: dict[str, ServiceResponse] = {}
+        while self._queue or self._slots:
+            self._tick(responses)
+        return responses
+
+    # --- internals ----------------------------------------------------------------
+
+    def _admit(self) -> None:
+        while self._queue and len(self._slots) < self.config.max_slots:
+            req = self._queue.pop(0)
+            cfg = req.config
+            if cfg.engine.cache_entries == 0 and self.config.cache_entries:
+                # service memory bound: long-lived processes must not grow the
+                # (hw, layer) cache without limit unless the request insists
+                cfg = dataclasses.replace(cfg, engine=dataclasses.replace(
+                    cfg.engine, cache_entries=self.config.cache_entries))
+            engine = CodesignEngine(cfg)
+            self._slots.append(_Slot(req, engine, engine.session(req.layers)))
+
+    def _fuse_key(self, slot: _Slot):
+        """Requests may share one stacked dispatch iff every knob their inner
+        searches consume agrees -- the same fields `design_key` hashes."""
+        eng = slot.engine.config.engine
+        return (dataclasses.astuple(slot.engine.config.sw),
+                eng.resolve_backend(), eng.pallas_mode, eng.batched,
+                eng.gp_refit_every)
+
+    def _tick(self, responses: dict[str, ServiceResponse]) -> None:
+        self.stats["ticks"] += 1
+        self._admit()
+
+        # Gather every session's pending inner searches; resolve store hits,
+        # dedup identical searches across requests (equal design_key implies
+        # equal fuse key: the key hashes the same fields), fuse the rest.
+        owners: dict[str, list[tuple[_Slot, tuple]]] = {}
+        groups: dict[tuple, dict] = {}
+        for slot in self._slots:
+            items, seeds = slot.session.pending()
+            sw_cfg = slot.engine.config.sw
+            eng_cfg = slot.engine.config.engine
+            for item, seed in zip(items, seeds):
+                key = design_key(item[0], item[1], sw_cfg, eng_cfg, seed)
+                if key in owners:  # another request queued this exact search
+                    owners[key].append((slot, item))
+                    self.stats["deduped_items"] += 1
+                    continue
+                if self.store is not None:
+                    entry = self.store.get(key)
+                    if entry is not None:
+                        slot.store_hits += 1
+                        slot.engine.cache[item] = entry
+                        continue
+                    slot.store_misses += 1
+                owners[key] = [(slot, item)]
+                fk = (self._fuse_key(slot) if self.config.fuse
+                      else ("slot", slot.request.rid))
+                g = groups.setdefault(fk, {"items": [], "seeds": [],
+                                           "keys": [], "slot": slot, "q": 1})
+                g["items"].append(item)
+                g["seeds"].append(seed)
+                g["keys"].append(key)
+                g["q"] = max(g["q"], len(dict.fromkeys(slot.engine._layers)))
+
+        # One stacked multi-run dispatch per fuse group: on the JAX backend
+        # every BO round of ALL fused requests' searches is a single fused
+        # device program.  Pad to a whole number of probes (the speculative
+        # strategy's bucketing) so the compiled per-round width stays stable
+        # as sessions' per-tick item counts fluctuate.
+        for g in groups.values():
+            cfg = g["slot"].engine.config
+            rs = optimize_software_fanout(
+                g["items"], cfg.sw, seeds=g["seeds"], engine=cfg.engine,
+                pad_to=-(-len(g["items"]) // g["q"]) * g["q"])
+            self.stats["fused_dispatches"] += 1
+            self.stats["fused_items"] += len(g["items"])
+            for (hw, layer), key, r in zip(g["items"], g["keys"], rs):
+                entry = _cache_entry(hw, layer, r)
+                for slot, item in owners[key]:
+                    slot.engine.cache[item] = entry
+                if self.store is not None:
+                    self.store.put(key, entry)
+
+        # Advance every session one outer stage; retire completed requests.
+        still = []
+        for slot in self._slots:
+            slot.ticks += 1
+            if slot.session.step():
+                still.append(slot)
+            else:
+                responses[slot.request.rid] = self._finish(slot)
+        self._slots = still
+
+    def _finish(self, slot: _Slot) -> ServiceResponse:
+        latency = time.perf_counter() - slot.t0
+        result = slot.session.result()
+        result.stats.update(store_hits=slot.store_hits,
+                            store_misses=slot.store_misses,
+                            latency_s=latency, ticks=slot.ticks)
+        return ServiceResponse(rid=slot.request.rid, result=result,
+                               latency_s=latency, ticks=slot.ticks)

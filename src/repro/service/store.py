@@ -1,0 +1,142 @@
+"""Persistent design store: content-addressed (hw, layer) inner-search results.
+
+The store is the cross-run sibling of `CodesignEngine`'s in-memory cache: an
+entry records the outcome of ONE inner software-mapping search -- the best
+mapping found (or infeasibility) and its true model EDP -- under a key that
+hashes everything that determines that search bit-for-bit:
+
+    design_key(hw, layer, sw_cfg, engine_cfg, probe_seed)
+
+Probe seeds are already content-derived (`CodesignEngine.probe_seed`), so two
+requests that probe the same hardware point under the same search config and
+run seed share a key -- and a store hit is an *exact replay* of the search the
+engine would run, not an approximation.  The scheduler prefills session
+caches from the store before dispatching searches, so repeated or
+overlapping workloads skip re-searching entirely.
+
+Layout (one JSON file per entry, fanned out by key prefix):
+
+    <dir>/ab/abcdef...1234.json
+
+Writes reuse the `repro.checkpoint` atomic pattern -- serialize to a
+temporary file in the destination directory, then `os.replace` -- so readers
+never observe a torn entry and concurrent writers of the same key are safe
+(last writer wins with identical bytes; keys are content-addressed).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import tempfile
+
+from repro.core.config import EngineConfig, SWSearchConfig
+from repro.timeloop.arch import HardwareConfig
+from repro.timeloop.mapping import Mapping
+from repro.timeloop.workloads import ConvLayer
+
+
+def design_key(hw: HardwareConfig, layer: ConvLayer,
+               sw_cfg: SWSearchConfig, engine_cfg: EngineConfig,
+               probe_seed: int) -> str:
+    """Stable content hash identifying one (hw, layer) inner search.
+
+    Includes every field that can change the search's result: the hardware
+    point, the layer, the full software search config, the engine fields the
+    inner `bo_maximize` consumes (resolved backend, refit stride, batched
+    protocol, pallas mode), and the probe's content-derived seed.  Engine
+    fields that only move work around (strategy, use_cache, hw_*) are
+    excluded -- strategies are pinned bit-identical to sequential."""
+    eng = (engine_cfg.resolve_backend(), engine_cfg.gp_refit_every,
+           engine_cfg.batched, engine_cfg.pallas_mode)
+    data = repr((dataclasses.astuple(hw), dataclasses.astuple(layer),
+                 dataclasses.astuple(sw_cfg), eng, int(probe_seed))).encode()
+    return hashlib.blake2s(data, digest_size=16).hexdigest()
+
+
+def _encode_entry(entry: tuple[Mapping | None, float]) -> dict:
+    mapping, edp = entry
+    if mapping is None:
+        return {"feasible": False}
+    return {
+        "feasible": True,
+        # float(edp) JSON round-trips exactly (repr serialization), so a
+        # warm entry is bit-identical to the search that produced it.
+        "edp": float(edp),
+        "mapping": {
+            "factors": [list(level) for level in mapping.factors],
+            "order_lb": list(mapping.order_lb),
+            "order_gb": list(mapping.order_gb),
+            "order_dram": list(mapping.order_dram),
+        },
+    }
+
+
+def _decode_entry(doc: dict) -> tuple[Mapping | None, float]:
+    if not doc["feasible"]:
+        return (None, float("inf"))
+    m = doc["mapping"]
+    mapping = Mapping(
+        factors=tuple(tuple(int(f) for f in level) for level in m["factors"]),
+        order_lb=tuple(m["order_lb"]),
+        order_gb=tuple(m["order_gb"]),
+        order_dram=tuple(m["order_dram"]),
+    )
+    return (mapping, float(doc["edp"]))
+
+
+class DesignStore:
+    """Content-addressed persistent store of inner-search results.
+
+    `get`/`put` speak the engine's cache-entry type directly:
+    `(Mapping | None, edp)` -- None marks a probed-and-infeasible layer
+    (storing infeasibility matters: re-discovering it costs a full search).
+    Tallies `hits`/`misses` for `CoDesignResult.stats`.
+    """
+
+    def __init__(self, directory: str):
+        self.directory = directory
+        os.makedirs(directory, exist_ok=True)
+        self.hits = 0
+        self.misses = 0
+
+    def _path(self, key: str) -> str:
+        return os.path.join(self.directory, key[:2], key + ".json")
+
+    def get(self, key: str) -> tuple[Mapping | None, float] | None:
+        try:
+            with open(self._path(key)) as f:
+                doc = json.load(f)
+        except (FileNotFoundError, json.JSONDecodeError):
+            self.misses += 1
+            return None
+        self.hits += 1
+        return _decode_entry(doc)
+
+    def put(self, key: str, entry: tuple[Mapping | None, float]) -> None:
+        path = self._path(key)
+        directory = os.path.dirname(path)
+        os.makedirs(directory, exist_ok=True)
+        # Atomic publish (the checkpoint/ idiom): write a unique temp file in
+        # the destination directory, then rename over the final name --
+        # readers never see a torn entry, concurrent same-key writers race
+        # benignly (identical content-addressed bytes).
+        fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(_encode_entry(entry), f)
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+    def __len__(self) -> int:
+        n = 0
+        for _, _, files in os.walk(self.directory):
+            n += sum(1 for f in files if f.endswith(".json"))
+        return n

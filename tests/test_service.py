@@ -1,0 +1,439 @@
+"""Co-design service (ISSUE 7): request scheduling, cross-request fusion, the
+persistent design store, and session snapshot/resume.
+
+The load-bearing contract is *bit-parity*: a request served by the
+`CodesignService` -- its inner searches fused with other requests' into one
+stacked dispatch per tick, possibly prefilled from the store -- must produce
+exactly the result of running its engine standalone.  That holds because
+
+  * probe seeds are content-derived (`CodesignEngine.probe_seed`), so an
+    inner search is the same wherever/whenever it runs;
+  * `SearchSession.pending()` is trajectory-neutral (the outer plan is
+    cached until `step()` commits it);
+  * `bo_maximize_many` stacking is composition-independent within the
+    stacked GP's Cholesky regime (budgets here keep every fit inside it --
+    see tests/test_layer_batch.py).
+
+Backend comes from REPRO_BACKEND (unset -> numpy), so the same tests pin
+parity on both CI jobs.
+"""
+
+import dataclasses
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import (CodesignConfig, CodesignEngine, EngineConfig,
+                        HWSearchConfig, LRUCache, ServiceConfig,
+                        SWSearchConfig, SearchSession, codesign)
+from repro.core import nested as nested_mod
+from repro.service import (CodesignService, DesignStore, ServiceRequest,
+                           design_key)
+from repro.timeloop import MODEL_LAYERS
+
+
+def svc_config(seed=0, strategy="sequential", n_hw=4, **eng):
+    # sw n_trials=12 keeps every stacked GP fit in the Cholesky regime where
+    # cross-request stacking is bit-identical to standalone searches.
+    return CodesignConfig(
+        sw=SWSearchConfig(n_trials=12, n_warmup=5, pool_size=15),
+        hw=HWSearchConfig(n_trials=n_hw, n_warmup=2, pool_size=15, spec_k=2),
+        engine=EngineConfig(strategy=strategy, **eng),
+        seed=seed)
+
+
+MIXED_REQUESTS = [  # mixed workloads x strategies x seeds
+    ("dqn", svc_config(0, "sequential")),
+    ("mlp", svc_config(1, "speculative")),
+    ("dqn", svc_config(2, "layer_batched")),
+    ("mlp", svc_config(3, "probe_fanout")),
+]
+
+
+def _standalone(model, config):
+    return CodesignEngine(config).run(MODEL_LAYERS[model])
+
+
+def _assert_parity(got, ref, where=""):
+    assert got.best_hw == ref.best_hw, where
+    assert got.best_model_edp == ref.best_model_edp, where
+    assert got.best_mappings == ref.best_mappings, where
+    assert np.array_equal(got.hw_result.history, ref.hw_result.history), where
+    assert got.hw_result.points == ref.hw_result.points, where
+
+
+class _FanoutSpy:
+    """Record every stacked dispatch `optimize_software_fanout` runs."""
+
+    def __init__(self):
+        self.calls = []
+
+    def __enter__(self):
+        self._orig = nested_mod.optimize_software_fanout
+
+        def spy(items, *a, **kw):
+            self.calls.append(list(items))
+            return self._orig(items, *a, **kw)
+
+        nested_mod.optimize_software_fanout = spy
+        # the scheduler module binds the name at import time too
+        import repro.service.scheduler as sched
+        self._sched_orig = sched.optimize_software_fanout
+        sched.optimize_software_fanout = spy
+        return self
+
+    def __exit__(self, *exc):
+        nested_mod.optimize_software_fanout = self._orig
+        import repro.service.scheduler as sched
+        sched.optimize_software_fanout = self._sched_orig
+
+
+# --- cross-request parity ---------------------------------------------------------
+
+
+@pytest.mark.parametrize("fuse", [True, False])
+def test_concurrent_requests_match_standalone(fuse):
+    """N mixed concurrent requests through the service == N standalone runs,
+    with and without cross-request fusion (fusion only moves work)."""
+    refs = [_standalone(m, c) for m, c in MIXED_REQUESTS]
+    svc = CodesignService(ServiceConfig(max_slots=len(MIXED_REQUESTS),
+                                        fuse=fuse))
+    rids = [svc.submit(ServiceRequest(layers=tuple(MODEL_LAYERS[m]), config=c))
+            for m, c in MIXED_REQUESTS]
+    responses = svc.run()
+    assert set(responses) == set(rids)
+    for rid, ref in zip(rids, refs):
+        _assert_parity(responses[rid].result, ref, where=rid)
+        stats = responses[rid].result.stats
+        assert stats["latency_s"] > 0 and stats["ticks"] > 0
+
+
+def test_staggered_admission_matches_standalone():
+    """max_slots < N: requests are admitted as slots free up (different
+    n_trials retire at different ticks) -- parity must survive sessions
+    joining mid-stream."""
+    reqs = [("dqn", svc_config(0, n_hw=3)), ("mlp", svc_config(1, n_hw=5)),
+            ("dqn", svc_config(2, n_hw=4)), ("mlp", svc_config(3, n_hw=3))]
+    refs = [_standalone(m, c) for m, c in reqs]
+    svc = CodesignService(ServiceConfig(max_slots=2))
+    rids = [svc.submit(ServiceRequest(layers=tuple(MODEL_LAYERS[m]), config=c))
+            for m, c in reqs]
+    responses = svc.run()
+    for rid, ref in zip(rids, refs):
+        _assert_parity(responses[rid].result, ref, where=rid)
+
+
+def test_identical_requests_dedup_to_one_search_stream():
+    """Two identical concurrent requests need each (hw, layer) search ONCE:
+    equal design keys collapse across requests, both sessions get the same
+    prefilled entries, both results match standalone."""
+    ref = _standalone("dqn", svc_config(7))
+    svc = CodesignService(ServiceConfig(max_slots=2))
+    with _FanoutSpy() as spy:
+        rids = [svc.submit(ServiceRequest(layers=tuple(MODEL_LAYERS["dqn"]),
+                                          config=svc_config(7)))
+                for _ in range(2)]
+        responses = svc.run()
+    for rid in rids:
+        _assert_parity(responses[rid].result, ref, where=rid)
+    searched = [it for call in spy.calls for it in call]
+    assert len(searched) == len(set(searched))  # nothing dispatched twice
+    assert svc.stats["deduped_items"] > 0
+
+
+def test_fused_dispatch_count():
+    """With fusion on, every tick issues at most ONE stacked dispatch for
+    requests sharing a search config (the cross-request fusion claim, counted
+    at the dispatch site)."""
+    svc = CodesignService(ServiceConfig(max_slots=3, fuse=True))
+    with _FanoutSpy() as spy:
+        for seed, model in enumerate(("dqn", "mlp", "dqn")):
+            svc.submit(ServiceRequest(layers=tuple(MODEL_LAYERS[model]),
+                                      config=svc_config(seed)))
+        svc.run()
+    assert len(spy.calls) == svc.stats["fused_dispatches"]
+    assert len(spy.calls) <= svc.stats["ticks"]
+    # and the fused streams really carried several requests' work: some
+    # dispatch mixes more than one hardware point's items
+    assert any(len({hw for hw, _ in call}) > 1 for call in spy.calls)
+
+
+# --- the design store -------------------------------------------------------------
+
+
+def test_store_roundtrip_feasible_and_infeasible(tmp_path):
+    from repro.timeloop import eyeriss_168
+    from repro.core.nested import optimize_software
+
+    hw = eyeriss_168()
+    layer = MODEL_LAYERS["dqn"][0]
+    cfg = svc_config(0)
+    r = optimize_software(hw, layer, cfg.sw, seed=3, engine=cfg.engine)
+    entry = nested_mod._cache_entry(hw, layer, r)
+
+    store = DesignStore(str(tmp_path))
+    key = design_key(hw, layer, cfg.sw, cfg.engine, 3)
+    assert store.get(key) is None and store.misses == 1
+    store.put(key, entry)
+    assert store.get(key) == entry  # exact mapping + exact float EDP
+    assert store.hits == 1 and len(store) == 1
+
+    store.put("beef" * 8, (None, float("inf")))  # infeasibility is cached too
+    assert store.get("beef" * 8) == (None, float("inf"))
+    assert len(store) == 2
+
+
+def test_design_key_separates_what_changes_the_search():
+    from repro.timeloop import eyeriss_168
+
+    hw = eyeriss_168()
+    layer = MODEL_LAYERS["dqn"][0]
+    cfg = svc_config(0)
+    base = design_key(hw, layer, cfg.sw, cfg.engine, 3)
+    assert base == design_key(hw, layer, cfg.sw, cfg.engine, 3)
+    # strategy moves work around, never changes a search -> same key
+    assert base == design_key(
+        hw, layer, cfg.sw,
+        dataclasses.replace(cfg.engine, strategy="speculative"), 3)
+    for other in (
+        design_key(hw, layer, cfg.sw, cfg.engine, 4),
+        design_key(hw, MODEL_LAYERS["dqn"][1], cfg.sw, cfg.engine, 3),
+        design_key(hw, layer, dataclasses.replace(cfg.sw, n_trials=13),
+                   cfg.engine, 3),
+        design_key(hw, layer, cfg.sw,
+                   dataclasses.replace(cfg.engine, gp_refit_every=2), 3),
+    ):
+        assert other != base
+
+
+def test_warm_store_rerun_runs_zero_inner_searches(tmp_path):
+    """The store acceptance criterion: resubmitting a served workload against
+    the same store performs ZERO inner mapping searches -- every (hw, layer)
+    result is an exact replay from disk -- and still returns the standalone
+    result bit-for-bit."""
+    reqs = MIXED_REQUESTS[:2]
+    refs = [_standalone(m, c) for m, c in reqs]
+    sc = ServiceConfig(max_slots=2, store_dir=str(tmp_path))
+
+    cold = CodesignService(sc)
+    rids = [cold.submit(ServiceRequest(layers=tuple(MODEL_LAYERS[m]),
+                                       config=c)) for m, c in reqs]
+    cold_resp = cold.run()
+    assert all(cold_resp[r].result.stats["store_misses"] > 0 for r in rids)
+    assert len(cold.store) > 0
+
+    warm = CodesignService(sc)
+    with _FanoutSpy() as spy:
+        rids2 = [warm.submit(ServiceRequest(layers=tuple(MODEL_LAYERS[m]),
+                                            config=c)) for m, c in reqs]
+        warm_resp = warm.run()
+    assert spy.calls == []  # zero inner searches
+    for rid, ref in zip(rids2, refs):
+        _assert_parity(warm_resp[rid].result, ref, where=rid)
+        stats = warm_resp[rid].result.stats
+        assert stats["store_misses"] == 0 and stats["store_hits"] > 0
+
+
+# --- session snapshot / resume ----------------------------------------------------
+
+
+def test_session_snapshot_restore_resumes_bit_identically():
+    """Interrupt a session halfway, snapshot, restore into a FRESH engine +
+    session, finish there: the result equals the uninterrupted run (GP refit
+    from the data prefix is deterministic; the cache rides in the
+    snapshot)."""
+    cfg = svc_config(5, "speculative", n_hw=6)
+    layers = MODEL_LAYERS["dqn"]
+    ref = CodesignEngine(cfg).run(layers)
+
+    first = CodesignEngine(cfg).session(layers)
+    for _ in range(3):
+        assert first.step()
+    snap = first.snapshot()
+
+    resumed = CodesignEngine(cfg).session(layers).restore(snap)
+    while resumed.step():
+        pass
+    _assert_parity(resumed.result(), ref)
+
+
+def test_snapshot_refuses_mid_trial():
+    cfg = svc_config(0)
+    session = CodesignEngine(cfg).session(MODEL_LAYERS["dqn"])
+    session.pending()  # plans the warmup block without committing it
+    with pytest.raises(RuntimeError):
+        session.snapshot()
+    assert session.step()  # the cached plan commits; the session continues
+
+
+def test_pending_is_trajectory_neutral():
+    """Calling pending() (any number of times) before each step cannot change
+    the trajectory: the outer plan is cached until committed."""
+    cfg = svc_config(4)
+    layers = MODEL_LAYERS["mlp"]
+    ref = CodesignEngine(cfg).run(layers)
+    session = CodesignEngine(cfg).session(layers)
+    while True:
+        items, seeds = session.pending()
+        assert len(items) == len(seeds)
+        assert session.pending()[0] == items  # cached plan -> same answer
+        if not session.step():
+            break
+    _assert_parity(session.result(), ref)
+
+
+# --- legacy shim ------------------------------------------------------------------
+
+
+def test_legacy_shim_routes_through_search_session():
+    """codesign(**legacy_kwargs) emits ONE consolidated DeprecationWarning and
+    drives the same SearchSession machinery as the config API."""
+    sessions = []
+    orig = nested_mod.SearchSession
+
+    class SpySession(orig):
+        def __init__(self, *a, **kw):
+            sessions.append(self)
+            super().__init__(*a, **kw)
+
+    nested_mod.SearchSession = SpySession
+    try:
+        with pytest.warns(DeprecationWarning) as record:
+            codesign(MODEL_LAYERS["dqn"], n_hw_trials=3, n_hw_warmup=2,
+                     n_sw_trials=10, n_sw_warmup=4, sw_pool=15, hw_pool=15)
+    finally:
+        nested_mod.SearchSession = orig
+    assert len(record) == 1  # one consolidated warning
+    assert len(sessions) == 1  # the run was the session, stepped through
+
+
+# --- config + request surface -----------------------------------------------------
+
+
+def test_service_config_validation_and_roundtrip():
+    sc = ServiceConfig(max_slots=2, fuse=False, store_dir="/tmp/x",
+                       cache_entries=10)
+    assert ServiceConfig.from_dict(sc.to_dict()) == sc
+    with pytest.raises(ValueError):
+        ServiceConfig(max_slots=0)
+    with pytest.raises(ValueError):
+        ServiceConfig(cache_entries=-1)
+    with pytest.raises(ValueError):
+        ServiceConfig(store_dir=7)
+    with pytest.raises(ValueError):
+        ServiceConfig.from_dict({"bogus": 1})
+
+
+def test_request_json_roundtrip_and_model_names():
+    req = ServiceRequest(layers=tuple(MODEL_LAYERS["dqn"]),
+                         config=svc_config(2), rid="abc")
+    back = ServiceRequest.from_json(req.to_json())
+    assert back == req
+    named = ServiceRequest.from_dict({"layers": "mlp"})
+    assert named.layers == tuple(MODEL_LAYERS["mlp"])
+    assert named.config == CodesignConfig()
+    with pytest.raises(ValueError):
+        ServiceRequest.from_dict({"layers": "nope"})
+    with pytest.raises(ValueError):
+        ServiceRequest.from_dict({"layers": "dqn", "bogus": 1})
+    with pytest.raises(ValueError):
+        ServiceRequest(layers=())
+
+
+def test_submit_accepts_json_and_rejects_duplicate_rids():
+    svc = CodesignService(ServiceConfig(max_slots=1))
+    rid = svc.submit(json.dumps({"layers": "dqn", "rid": "x",
+                                 "config": svc_config(0).to_dict()}))
+    assert rid == "x"
+    with pytest.raises(ValueError):
+        svc.submit(ServiceRequest(layers=tuple(MODEL_LAYERS["dqn"]),
+                                  rid="x"))
+    assert svc.submit(ServiceRequest(layers=tuple(MODEL_LAYERS["dqn"]))) \
+        .startswith("r")
+
+
+# --- bounded caches ---------------------------------------------------------------
+
+
+def test_lru_cache_bounds_and_counts():
+    c = LRUCache(maxsize=2)
+    c["a"], c["b"] = 1, 2
+    assert c["a"] == 1  # refreshes recency
+    c["c"] = 3          # evicts "b" (least recent)
+    assert "b" not in c and "a" in c and "c" in c
+    assert c.evictions == 1
+    assert c.hits == 3          # the read + two membership hits
+    assert c.misses == 1        # the "b" probe
+    unbounded = LRUCache(0)
+    for i in range(100):
+        unbounded[i] = i
+    assert len(unbounded) == 100 and unbounded.evictions == 0
+
+
+def test_service_applies_cache_bound_to_requests():
+    """A request that leaves engine.cache_entries at 0 gets the service-level
+    LRU bound; eviction accounting surfaces in its result stats."""
+    svc = CodesignService(ServiceConfig(max_slots=1, cache_entries=3))
+    rid = svc.submit(ServiceRequest(layers=tuple(MODEL_LAYERS["dqn"]),
+                                    config=svc_config(0)))
+    stats = svc.run()[rid].result.stats
+    assert stats["cache_size"] <= 3
+    assert stats["cache_evictions"] > 0
+
+
+# --- checkpoint writer fixes ------------------------------------------------------
+
+
+def _tree(step):
+    return {"w": np.full((4, 3), float(step)), "b": np.arange(3.0) + step}
+
+
+def test_concurrent_checkpoint_saves_are_safe(tmp_path):
+    """Many threads saving different steps into ONE directory: no torn step
+    dirs, LATEST points at the highest step, restore succeeds."""
+    from repro.checkpoint import checkpoint as ckpt
+
+    steps = list(range(8))
+    threads = [threading.Thread(target=ckpt.save,
+                                args=(str(tmp_path), s, _tree(s)))
+               for s in steps]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert ckpt.latest_step(str(tmp_path)) == max(steps)
+    state, step = ckpt.restore(str(tmp_path), _tree(0))
+    assert step == max(steps)
+    np.testing.assert_array_equal(state["w"], _tree(step)["w"])
+    leftovers = [n for n in tmp_path.iterdir() if ".tmp" in n.name]
+    assert leftovers == []
+
+
+def test_latest_pointer_is_monotone(tmp_path):
+    """A slow writer finishing an OLD step must not move LATEST backwards."""
+    from repro.checkpoint import checkpoint as ckpt
+
+    ckpt.save(str(tmp_path), 5, _tree(5))
+    ckpt.save(str(tmp_path), 3, _tree(3))  # late low-step save
+    assert ckpt.latest_step(str(tmp_path)) == 5
+    state, step = ckpt.restore(str(tmp_path), _tree(0), step=3)
+    assert step == 3  # the old step is still restorable by name
+
+
+def test_async_checkpointer_close_joins_and_reraises(tmp_path):
+    from repro.checkpoint import checkpoint as ckpt
+
+    with ckpt.AsyncCheckpointer(str(tmp_path)) as cp:
+        cp.save(1, _tree(1))
+        cp.save(2, _tree(2))  # waits for save 1 first
+    assert cp.last_saved == 2
+    assert cp._thread is None  # close() joined the writer
+    assert ckpt.latest_step(str(tmp_path)) == 2
+
+    bad = ckpt.AsyncCheckpointer(str(tmp_path / "missing" / "\0bad"))
+    bad.save(1, _tree(1))
+    with pytest.raises(ValueError):
+        bad.close()
+    bad.close()  # error is raised once, then the checkpointer is clean

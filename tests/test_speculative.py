@@ -218,7 +218,17 @@ def test_speculative_hits_skip_reevaluation():
 def test_non_speculative_strategies_report_zero_spec_stats():
     r = CodesignEngine(spec_config("layer_batched",
                                    backend="numpy")).run(MODEL_LAYERS["dqn"])
-    assert r.stats == {"spec_evaluated": 0, "spec_hits": 0,
-                       "spec_hit_rate": 0.0,
-                       "prune_considered": 0, "prune_pruned": 0,
-                       "pruned_fraction": 0.0, "probes_gated": 0}
+    expected = {"spec_evaluated": 0, "spec_hits": 0, "spec_hit_rate": 0.0,
+                "prune_considered": 0, "prune_pruned": 0,
+                "pruned_fraction": 0.0, "probes_gated": 0}
+    assert {k: r.stats[k] for k in expected} == expected
+    # Cache accounting (ISSUE 7) rides along: the run populated the engine
+    # cache (misses) and read it back at evaluation time (hits), nothing was
+    # evicted (unbounded default), and the feature-memo tallies are present.
+    assert r.stats["cache_size"] > 0
+    assert r.stats["cache_hits"] > 0
+    assert r.stats["cache_misses"] >= r.stats["cache_size"]
+    assert r.stats["cache_evictions"] == 0
+    for key in ("hw_feat_hits", "hw_feat_misses",
+                "sw_feat_hits", "sw_feat_misses"):
+        assert r.stats[key] >= 0
