@@ -45,6 +45,14 @@ ratios are as robust as the hot-path ones:
                                       record also carries requests/min and
                                       the warm-store replay time)
     service_e2e.jax_speedup          (annotating only, like jax_speedup)
+    executor_e2e.numpy_speedup       (gating: the same mixed request batch
+                                      through a process-executor service vs
+                                      the single-process service; the record
+                                      carries `cpus` -- the ratio is ~1x on a
+                                      single-core runner and only shows real
+                                      fan-out on multi-core CI hardware, but
+                                      both sides of any one record share a
+                                      machine so the cross-PR ratio holds)
 
 A missing/invalid previous record is not an error -- first runs and artifact
 expiry just skip the gate with a notice.  Records written before a metric
@@ -149,6 +157,7 @@ def main() -> int:
         ("prune.jax_speedup", None, False),
         ("service.numpy_speedup", None, True),
         ("service.jax_speedup", None, False),
+        ("executor.numpy_speedup", None, True),
     ):
         if extract is None:
             section, metric = key.split(".", 1)
@@ -156,7 +165,8 @@ def main() -> int:
                        "probe_fanout": "probe_fanout_e2e",
                        "speculative": "speculative_e2e",
                        "prune": "prune_e2e",
-                       "service": "service_e2e"}[section]
+                       "service": "service_e2e",
+                       "executor": "executor_e2e"}[section]
             olds = _section_speedups(old, section, metric)
             news = _section_speedups(new, section, metric)
         else:

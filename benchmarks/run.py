@@ -87,7 +87,10 @@ def main() -> None:
     print("# co-design service -- fused concurrent requests vs sequential "
           "standalone (per backend)")
     svc = bo_codesign.service_speedup()
-    bo_codesign.print_speedups(eng, e2e, lbe, pfe, spec, prune, svc)
+    print("# process executor -- multiprocess fan-out vs single-process "
+          "service (numpy; speedup scales with cores)")
+    execu = bo_codesign.executor_speedup()
+    bo_codesign.print_speedups(eng, e2e, lbe, pfe, spec, prune, svc, execu)
 
     print("# Fig. 5b/5c -- surrogate/acquisition + lambda ablations")
     bo_ablation.run(n_trials=250 if args.paper else 80,
@@ -107,6 +110,7 @@ def main() -> None:
         collect["speculative_e2e"] = spec
         collect["prune_e2e"] = prune
         collect["service_e2e"] = svc
+        collect["executor_e2e"] = execu
         collect["backend"] = backend
         collect["paper_budgets"] = bool(args.paper)
         collect["total_s"] = round(total, 1)

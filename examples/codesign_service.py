@@ -2,7 +2,7 @@
 
     PYTHONPATH=src python examples/codesign_service.py [--tiny]
         [--store-dir DIR] [--max-slots N] [--no-fuse]
-        [--backend numpy|jax]
+        [--backend numpy|jax] [--executor inline|process] [--workers N]
 
 Submits a mixed batch of co-design requests (DQN + MLP workloads, one of them
 round-tripped through the JSON queue surface), serves them concurrently --
@@ -21,9 +21,10 @@ import argparse
 import shutil
 import tempfile
 
-from repro.core import (BACKENDS, CodesignConfig, EngineConfig,
-                        HWSearchConfig, ServiceConfig, SWSearchConfig)
-from repro.service import CodesignService, ServiceRequest
+from repro.core import (BACKENDS, EXECUTOR_KINDS, CodesignConfig,
+                        EngineConfig, ExecutorConfig, HWSearchConfig,
+                        ServiceConfig, SWSearchConfig)
+from repro.service import CodesignService, ServiceRequest, make_executor
 from repro.timeloop import MODEL_LAYERS
 
 
@@ -45,8 +46,8 @@ def build_requests(args) -> list[ServiceRequest]:
     return reqs
 
 
-def serve(requests, service_config) -> None:
-    svc = CodesignService(service_config)
+def serve(requests, service_config, executor=None) -> None:
+    svc = CodesignService(service_config, executor=executor)
     rids = [svc.submit(r) for r in requests]
     responses = svc.run()
     for rid in rids:
@@ -77,22 +78,36 @@ def main():
     ap.add_argument("--store-dir", default=None, metavar="DIR",
                     help="persistent design-store directory (default: a "
                          "temporary one, removed on exit)")
+    ap.add_argument("--executor", default="inline", choices=EXECUTOR_KINDS,
+                    help="where fused dispatches run: in-process (inline) or "
+                         "on a worker-process pool (results are bit-identical "
+                         "either way)")
+    ap.add_argument("--workers", type=int, default=0,
+                    help="process-executor pool width (0 = one per core, "
+                         "capped at 4)")
     args = ap.parse_args()
 
     store_dir = args.store_dir or tempfile.mkdtemp(prefix="design_store_")
     sc = ServiceConfig(max_slots=args.max_slots, fuse=not args.no_fuse,
-                       store_dir=store_dir)
+                       store_dir=store_dir,
+                       executor=ExecutorConfig(kind=args.executor,
+                                               n_workers=args.workers))
     requests = build_requests(args)
 
+    # One shared executor across both passes, so the process pool's spawn +
+    # import cost is paid once (exactly how a long-lived service would run).
+    executor = make_executor(sc.executor)
     try:
         print(f"cold pass: {len(requests)} concurrent requests, "
-              f"max_slots={sc.max_slots}, fuse={sc.fuse}, store={store_dir}")
-        serve(requests, sc)
+              f"max_slots={sc.max_slots}, fuse={sc.fuse}, "
+              f"executor={executor.kind}, store={store_dir}")
+        serve(requests, sc, executor)
 
         print("warm pass: same workload resubmitted -- every (hw, layer) "
               "search replays from the design store, zero inner searches")
-        serve(requests, sc)
+        serve(requests, sc, executor)
     finally:
+        executor.close()
         if args.store_dir is None:
             shutil.rmtree(store_dir, ignore_errors=True)
 

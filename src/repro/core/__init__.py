@@ -6,16 +6,17 @@ The search surface is the typed config API (`repro.core.config`):
 `CodesignEngine`; `codesign(**legacy_kwargs)` remains as a deprecation shim.
 """
 
-from repro.core.config import (ACQUISITIONS, BACKENDS, PALLAS_MODES,
-                               PRUNE_MODES, STRATEGIES, SURROGATES,
-                               CodesignConfig, EngineConfig, HWSearchConfig,
-                               SearchConfig, ServiceConfig, SWSearchConfig,
+from repro.core.config import (ACQUISITIONS, BACKENDS, EXECUTOR_KINDS,
+                               PALLAS_MODES, PRUNE_MODES, STRATEGIES,
+                               SURROGATES, CodesignConfig, EngineConfig,
+                               ExecutorConfig, HWSearchConfig, SearchConfig,
+                               ServiceConfig, SWSearchConfig,
                                config_from_legacy_kwargs)
 from repro.core.cache import LRUCache, SlotCache, counters_snapshot
 from repro.core.gp import GP, GPClassifier, GPClassifierStack, GPStack
 from repro.core.acquisition import expected_improvement, lcb, make_acquisition
-from repro.core.bo import (BOLoop, BOResult, bo_maximize, bo_maximize_many,
-                           score_topk)
+from repro.core.bo import (BOLoop, BOResult, FanoutSearchSpec, bo_maximize,
+                           bo_maximize_many, score_topk)
 from repro.core.swspace import LayerStackSpace, SoftwareSpace, fanout_spaces
 from repro.core.hwspace import HardwareSpace
 from repro.core.nested import (PROBE_STRATEGIES, CoDesignResult,
@@ -31,12 +32,14 @@ from repro.core.trees import GradientBoostedTrees, RandomForestSurrogate
 __all__ = [
     "ACQUISITIONS",
     "BACKENDS",
+    "EXECUTOR_KINDS",
     "PALLAS_MODES",
     "PRUNE_MODES",
     "STRATEGIES",
     "SURROGATES",
     "CodesignConfig",
     "EngineConfig",
+    "ExecutorConfig",
     "HWSearchConfig",
     "SearchConfig",
     "ServiceConfig",
@@ -54,6 +57,7 @@ __all__ = [
     "make_acquisition",
     "BOLoop",
     "BOResult",
+    "FanoutSearchSpec",
     "bo_maximize",
     "bo_maximize_many",
     "score_topk",

@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import os
 from typing import Any
 
 BACKENDS = ("numpy", "jax")
@@ -37,6 +38,7 @@ STRATEGIES = ("auto", "sequential", "layer_batched", "probe_fanout",
               "speculative")
 PALLAS_MODES = ("jnp", "pallas", "interpret")
 PRUNE_MODES = ("off", "safe", "aggressive")
+EXECUTOR_KINDS = ("inline", "process")
 
 
 def validate_choice(field: str, value, choices, optional: bool = False) -> None:
@@ -145,6 +147,60 @@ class HWSearchConfig(SearchConfig):
 
 
 @dataclasses.dataclass(frozen=True)
+class ExecutorConfig:
+    """Where stacked inner-search dispatches run (`repro.parallel.executor`).
+
+    kind         "inline"   run each submitted search spec synchronously in
+                            the learner process (the historical behavior --
+                            zero overhead, zero processes)
+                 "process"  a pool of persistent spawn-started worker
+                            processes pulls whole stacked k*L-run searches
+                            from a task queue and returns (mapping, EDP)
+                            entries.  Content-derived probe seeds make the
+                            results bit-identical to inline for every worker
+                            count (pinned against the goldens).
+    n_workers    worker-pool width for kind="process"; 0 (default) resolves
+                 to min(4, cpu_count).
+    chunk_items  split each submitted spec into chunks of at most this many
+                 (hw, layer) items so one stacked dispatch spreads across
+                 idle workers; 0 (default) splits evenly across the pool
+                 (ceil(n_items / n_workers)).  Chunking only regroups which
+                 runs share a stacked fit -- the same composition freedom the
+                 service's cross-request fusion already exercises -- so it
+                 cannot change results in the pinned Cholesky regime.
+    """
+
+    kind: str = "inline"
+    n_workers: int = 0
+    chunk_items: int = 0
+
+    def __post_init__(self) -> None:
+        validate_choice("kind", self.kind, EXECUTOR_KINDS)
+        _validate_positive_int("n_workers", self.n_workers, minimum=0)
+        _validate_positive_int("chunk_items", self.chunk_items, minimum=0)
+
+    def resolve_workers(self) -> int:
+        if self.n_workers:
+            return self.n_workers
+        return max(1, min(4, os.cpu_count() or 1))
+
+
+def _coerce_executor(obj, owner: str) -> ExecutorConfig:
+    """Accept an ExecutorConfig, a JSON dict (the from_dict path), or None."""
+    if obj is None:
+        return ExecutorConfig()
+    if isinstance(obj, ExecutorConfig):
+        return obj
+    if isinstance(obj, dict):
+        try:
+            return ExecutorConfig(**obj)
+        except TypeError as e:
+            raise ValueError(f"invalid {owner}.executor dict: {e}") from None
+    raise ValueError(f"{owner}.executor must be an ExecutorConfig or dict, "
+                     f"got {obj!r}")
+
+
+@dataclasses.dataclass(frozen=True)
 class EngineConfig:
     """Evaluation machinery, orthogonal to either loop's search budget.
 
@@ -192,6 +248,10 @@ class EngineConfig:
                     guaranteed identical to unbounded ones while nothing is
                     evicted.  Long-lived service processes set this
                     (`ServiceConfig.cache_entries`).
+    executor        where stacked inner-search dispatches run
+                    (`ExecutorConfig`; dicts from the JSON surface are
+                    coerced).  Purely a placement knob: it cannot enter the
+                    design-store key because it cannot change results.
     """
 
     backend: str | None = None
@@ -203,8 +263,12 @@ class EngineConfig:
     pallas_mode: str | None = None
     gp_rank1_updates: bool = False
     cache_entries: int = 0
+    executor: ExecutorConfig = dataclasses.field(
+        default_factory=ExecutorConfig)
 
     def __post_init__(self) -> None:
+        object.__setattr__(self, "executor",
+                           _coerce_executor(self.executor, "EngineConfig"))
         validate_choice("backend", self.backend, BACKENDS, optional=True)
         validate_choice("strategy", self.strategy, STRATEGIES)
         validate_choice("pallas_mode", self.pallas_mode, PALLAS_MODES,
@@ -296,14 +360,22 @@ class ServiceConfig:
                    cache when the request's own `EngineConfig.cache_entries`
                    is 0 -- long-lived service processes must not grow
                    memory without bound.
+    executor       where the scheduler's fused per-tick dispatches run
+                   (`ExecutorConfig`).  kind="process" also overlaps ticks:
+                   sessions whose pending work is still in flight park while
+                   sessions with resolved results step immediately.
     """
 
     max_slots: int = 4
     fuse: bool = True
     store_dir: str | None = None
     cache_entries: int = 65536
+    executor: ExecutorConfig = dataclasses.field(
+        default_factory=ExecutorConfig)
 
     def __post_init__(self) -> None:
+        object.__setattr__(self, "executor",
+                           _coerce_executor(self.executor, "ServiceConfig"))
         _validate_positive_int("max_slots", self.max_slots)
         _validate_positive_int("cache_entries", self.cache_entries, minimum=0)
         if self.store_dir is not None and not isinstance(self.store_dir, str):

@@ -50,9 +50,9 @@ from typing import Callable, Sequence
 
 import numpy as np
 
-from repro.core.bo import (BOLoop, BOResult, InfeasibleSpace,
-                           _resolve_search_config, bo_maximize,
-                           bo_maximize_many, score_topk)
+from repro.core.bo import (BOLoop, BOResult, FanoutSearchSpec,
+                           InfeasibleSpace, _resolve_search_config,
+                           bo_maximize, bo_maximize_many, score_topk)
 from repro.core.cache import LRUCache, counters_snapshot
 from repro.core.config import (CodesignConfig, EngineConfig, SWSearchConfig,
                                config_from_legacy_kwargs)
@@ -290,10 +290,8 @@ class ProbeFanoutProbes(LayerBatchedProbes):
         items, seeds, _ = engine.pending_items(pool)
         if not items:
             return
-        rs = optimize_software_fanout(items, engine.config.sw, seeds=seeds,
-                                      engine=engine.config.engine)
-        for (hw, layer), r in zip(items, rs):
-            engine.cache[(hw, layer)] = _cache_entry(hw, layer, r)
+        for (hw, layer), entry in zip(items, engine.fanout(items, seeds)):
+            engine.cache[(hw, layer)] = entry
 
 
 class SpeculativeProbes(ProbeFanoutProbes):
@@ -320,16 +318,16 @@ class SpeculativeProbes(ProbeFanoutProbes):
         if not items:
             return
         n_layers = len(dict.fromkeys(engine._layers))
-        rs = optimize_software_fanout(
-            items, engine.config.sw, seeds=seeds, engine=engine.config.engine,
+        entries = engine.fanout(
+            items, seeds,
             # Bucketed fan-out width on jax: pad the stack to a whole number
             # of probes so the per-round fused program compiles for at most
             # spec_k distinct run counts as cached probes drop out of later
             # trials' top-k, while padding (real redundant runs -- lax.map GP
             # slices are NOT free on CPU) stays under one probe's worth.
             pad_to=-(-len(items) // n_layers) * n_layers)
-        for (hw, layer), r in zip(items, rs):
-            engine.cache[(hw, layer)] = _cache_entry(hw, layer, r)
+        for (hw, layer), entry in zip(items, entries):
+            engine.cache[(hw, layer)] = entry
         engine.stats["spec_evaluated"] += len(speculated)
         engine._speculated.update(speculated)
 
@@ -377,7 +375,8 @@ class CodesignEngine:
         speculative cache hits; reset per `run`).
     """
 
-    def __init__(self, config: CodesignConfig | None = None):
+    def __init__(self, config: CodesignConfig | None = None,
+                 executor=None):
         self.config = config if config is not None else CodesignConfig()
         self.backend = self.config.engine.resolve_backend()
         self.strategy_name = self.config.engine.resolve_strategy()
@@ -389,6 +388,38 @@ class CodesignEngine:
         self.stats: dict[str, int] = {"spec_evaluated": 0, "spec_hits": 0}
         self._speculated: set[HardwareConfig] = set()
         self._gate: Callable | None = None
+        # Executor injection (the service shares one pool across slots); when
+        # None, one is built lazily from `config.engine.executor` on the
+        # first fan-out and owned (closed) by this engine.
+        self._executor = executor
+        self._owns_executor = False
+
+    @property
+    def executor(self):
+        if self._executor is None:
+            from repro.parallel.executor import make_executor
+
+            self._executor = make_executor(self.config.engine.executor)
+            self._owns_executor = True
+        return self._executor
+
+    def fanout(self, items, seeds, pad_to: int | None = None) -> list:
+        """Run one stacked multi-item inner search through the executor and
+        return its `(mapping | None, EDP)` cache entries in item order.
+        Placement (inline / worker pool / chunking) is invisible here:
+        content-derived seeds make the entries identical everywhere."""
+        spec = FanoutSearchSpec(items=tuple(items), seeds=tuple(seeds),
+                                sw=self.config.sw, engine=self.config.engine,
+                                pad_to=pad_to)
+        return self.executor.run(spec)
+
+    def close(self) -> None:
+        """Shut down an executor this engine created (no-op for injected
+        executors and the never-used lazy default)."""
+        if self._owns_executor and self._executor is not None:
+            self._executor.close()
+            self._executor = None
+            self._owns_executor = False
 
     def probe_seed(self, hw: HardwareConfig) -> int:
         """Content-derived inner-search seed for one hardware probe: a stable

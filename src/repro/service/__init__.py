@@ -9,7 +9,9 @@ Per-request results are bit-identical to standalone `CodesignEngine.run`
 (see `repro.service.scheduler` for the two scope notes).
 """
 
-from repro.core.config import ServiceConfig
+from repro.core.config import ExecutorConfig, ServiceConfig
+from repro.parallel.executor import (InlineExecutor, ProcessExecutor,
+                                     make_executor)
 from repro.service.scheduler import (CodesignService, ServiceRequest,
                                      ServiceResponse)
 from repro.service.store import DesignStore, design_key
@@ -17,8 +19,12 @@ from repro.service.store import DesignStore, design_key
 __all__ = [
     "CodesignService",
     "DesignStore",
+    "ExecutorConfig",
+    "InlineExecutor",
+    "ProcessExecutor",
     "ServiceConfig",
     "ServiceRequest",
     "ServiceResponse",
     "design_key",
+    "make_executor",
 ]

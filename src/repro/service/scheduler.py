@@ -5,17 +5,29 @@ JSON); the service admits up to `ServiceConfig.max_slots` of them as live
 `SearchSession`s and advances all of them in lockstep ticks, the slot-admission
 shape of `launch/serve.py`'s decode batch.  Each tick:
 
-  1. admit queued requests into free slots;
-  2. collect every active session's `pending()` work -- the (hw, layer) inner
-     software searches its next outer trial needs, with content-derived seeds;
+  1. admit queued requests into free slots (higher `priority` first, FIFO
+     within a priority);
+  2. collect every un-parked session's `pending()` work -- the (hw, layer)
+     inner software searches its next outer trial needs, with
+     content-derived seeds;
   3. resolve what it can from the persistent `DesignStore` (exact replays,
-     keyed by `design_key`), deduplicate identical searches across requests,
-     and fuse the remainder into ONE cross-request stacked
-     `optimize_software_fanout` dispatch per fuse group (requests whose
-     search config + backend agree share a group; `fuse=False` keeps one
-     dispatch per request -- the ablation baseline);
-  4. prefill each owning session's cache with the results, publish them to
-     the store, and `step()` every session one outer trial.
+     keyed by `design_key`), deduplicate identical searches against
+     everything queued or already in flight, and fuse the remainder into ONE
+     cross-request stacked dispatch per fuse group (requests whose search
+     config + backend agree share a group; `fuse=False` keeps one dispatch
+     per request -- the ablation baseline), submitted to the service's
+     executor (`repro.parallel`) as a pickle-safe `FanoutSearchSpec`;
+  4. collect resolved dispatches (blocking only when every live session is
+     parked), prefill each owning session's cache, publish entries to the
+     store, and `step()` each session whose work resolved one outer trial.
+
+With the default inline executor every dispatch resolves in its own tick and
+the schedule is exactly the historical synchronous one.  With
+`ExecutorConfig(kind="process")` the ticks *overlap*: sessions whose pending
+work is still in flight park while sessions with resolved results step
+immediately, so one slow fuse group no longer gates every other request --
+the learner process keeps all outer GP/acquisition state machines hot while
+worker processes run the stacked inner searches.
 
 Because probe seeds are content-derived and `SearchSession.pending()` is
 trajectory-neutral (the outer plan is cached until `step()` commits it), a
@@ -36,9 +48,10 @@ import dataclasses
 import json
 import time
 
+from repro.core.bo import FanoutSearchSpec
 from repro.core.config import CodesignConfig, ServiceConfig
-from repro.core.nested import (CodesignEngine, CoDesignResult, SearchSession,
-                               _cache_entry, optimize_software_fanout)
+from repro.core.nested import CodesignEngine, CoDesignResult, SearchSession
+from repro.parallel.executor import make_executor
 from repro.service.store import DesignStore, design_key
 from repro.timeloop.workloads import MODEL_LAYERS, ConvLayer
 
@@ -46,15 +59,25 @@ from repro.timeloop.workloads import MODEL_LAYERS, ConvLayer
 @dataclasses.dataclass(frozen=True)
 class ServiceRequest:
     """One co-design request: the layers to co-design for and the full search
-    config.  `rid=None` lets the service assign one at submission."""
+    config.  `rid=None` lets the service assign one at submission.
+
+    `priority` (higher first) orders admission from the queue and the per-tick
+    fuse-group submission to the executor; within one priority, admission
+    stays FIFO.  Priorities only reorder WHEN work runs -- content-derived
+    seeds keep every request's result identical either way."""
 
     layers: tuple[ConvLayer, ...]
     config: CodesignConfig = dataclasses.field(default_factory=CodesignConfig)
     rid: str | None = None
+    priority: int = 0
 
     def __post_init__(self) -> None:
         if not self.layers:
             raise ValueError("request has no layers")
+        if not isinstance(self.priority, int) or isinstance(self.priority,
+                                                            bool):
+            raise ValueError(
+                f"priority must be an int, got {self.priority!r}")
         object.__setattr__(self, "layers", tuple(self.layers))
 
     # --- JSON queue surface -------------------------------------------------------
@@ -80,13 +103,16 @@ class ServiceRequest:
         elif config is None:
             config = CodesignConfig()
         rid = d.pop("rid", None)
+        priority = d.pop("priority", 0)
         if d:
             raise ValueError(f"unknown request key(s) {sorted(d)}")
-        return cls(layers=tuple(layers), config=config, rid=rid)
+        return cls(layers=tuple(layers), config=config, rid=rid,
+                   priority=priority)
 
     def to_dict(self) -> dict:
         return {
             "rid": self.rid,
+            "priority": self.priority,
             "layers": [dataclasses.asdict(layer) for layer in self.layers],
             "config": self.config.to_dict(),
         }
@@ -110,7 +136,10 @@ class ServiceResponse:
 
 class _Slot:
     """One admitted request: its engine + live session and per-request
-    accounting."""
+    accounting.  `waiting` holds the design keys of this session's pending
+    searches that are still in flight on the executor -- a slot with a
+    non-empty `waiting` set is *parked*: it neither re-gathers nor steps
+    until every key resolves (the overlapped-tick mechanism)."""
 
     def __init__(self, request: ServiceRequest, engine: CodesignEngine,
                  session: SearchSession):
@@ -121,6 +150,7 @@ class _Slot:
         self.ticks = 0
         self.store_hits = 0
         self.store_misses = 0
+        self.waiting: set[str] = set()
 
 
 class CodesignService:
@@ -131,17 +161,43 @@ class CodesignService:
     the two scope notes)."""
 
     def __init__(self, config: ServiceConfig | None = None,
-                 store: DesignStore | None = None):
+                 store: DesignStore | None = None, executor=None):
         self.config = config if config is not None else ServiceConfig()
         if store is None and self.config.store_dir is not None:
             store = DesignStore(self.config.store_dir)
         self.store = store
+        # The executor every fused dispatch runs on: injected (shared pools
+        # amortize worker start-up across services) or built from
+        # `ServiceConfig.executor` and owned -- `close()` shuts an owned
+        # pool down.
+        self._owns_executor = executor is None
+        self.executor = executor if executor is not None \
+            else make_executor(self.config.executor)
         self._queue: list[ServiceRequest] = []
         self._slots: list[_Slot] = []
         self._next_rid = 0
+        self._next_job = 0
+        # design_key -> [(slot, item), ...] for every unresolved search, and
+        # job id -> fuse group for every dispatch in flight.  Both persist
+        # across ticks: with a process executor, a tick's dispatches may
+        # resolve several ticks later while other sessions keep stepping.
+        self._owners: dict[str, list[tuple[_Slot, tuple]]] = {}
+        self._inflight: dict[int, dict] = {}
         # service-level accounting (per-request numbers land in result.stats)
         self.stats = {"ticks": 0, "fused_dispatches": 0, "fused_items": 0,
                       "deduped_items": 0}
+
+    def close(self) -> None:
+        """Shut down an owned executor pool (no-op for injected executors);
+        idempotent."""
+        if self._owns_executor:
+            self.executor.close()
+
+    def __enter__(self) -> "CodesignService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     def submit(self, request: ServiceRequest | dict | str) -> str:
         """Enqueue a request (admitted when a slot frees up); returns its rid,
@@ -169,6 +225,9 @@ class CodesignService:
     # --- internals ----------------------------------------------------------------
 
     def _admit(self) -> None:
+        # Higher priority admits first; the sort is stable, so submission
+        # order (FIFO) breaks ties exactly as before priorities existed.
+        self._queue.sort(key=lambda r: -r.priority)
         while self._queue and len(self._slots) < self.config.max_slots:
             req = self._queue.pop(0)
             cfg = req.config
@@ -177,7 +236,7 @@ class CodesignService:
                 # (hw, layer) cache without limit unless the request insists
                 cfg = dataclasses.replace(cfg, engine=dataclasses.replace(
                     cfg.engine, cache_entries=self.config.cache_entries))
-            engine = CodesignEngine(cfg)
+            engine = CodesignEngine(cfg, executor=self.executor)
             self._slots.append(_Slot(req, engine, engine.session(req.layers)))
 
     def _fuse_key(self, slot: _Slot):
@@ -192,19 +251,25 @@ class CodesignService:
         self.stats["ticks"] += 1
         self._admit()
 
-        # Gather every session's pending inner searches; resolve store hits,
-        # dedup identical searches across requests (equal design_key implies
-        # equal fuse key: the key hashes the same fields), fuse the rest.
-        owners: dict[str, list[tuple[_Slot, tuple]]] = {}
+        # Gather each un-parked session's pending inner searches (higher
+        # request priority gathers -- and therefore submits -- first);
+        # resolve store hits, dedup identical searches against everything
+        # queued OR already in flight (equal design_key implies equal fuse
+        # key: the key hashes the same fields), fuse the rest.  Parked slots
+        # are skipped: `pending()` is trajectory-neutral, so their pending
+        # work is exactly the in-flight work they are waiting on.
         groups: dict[tuple, dict] = {}
-        for slot in self._slots:
+        for slot in sorted(self._slots, key=lambda s: -s.request.priority):
+            if slot.waiting:
+                continue
             items, seeds = slot.session.pending()
             sw_cfg = slot.engine.config.sw
             eng_cfg = slot.engine.config.engine
             for item, seed in zip(items, seeds):
                 key = design_key(item[0], item[1], sw_cfg, eng_cfg, seed)
-                if key in owners:  # another request queued this exact search
-                    owners[key].append((slot, item))
+                if key in self._owners:  # identical search queued/in flight
+                    self._owners[key].append((slot, item))
+                    slot.waiting.add(key)
                     self.stats["deduped_items"] += 1
                     continue
                 if self.store is not None:
@@ -214,7 +279,8 @@ class CodesignService:
                         slot.engine.cache[item] = entry
                         continue
                     slot.store_misses += 1
-                owners[key] = [(slot, item)]
+                self._owners[key] = [(slot, item)]
+                slot.waiting.add(key)
                 fk = (self._fuse_key(slot) if self.config.fuse
                       else ("slot", slot.request.rid))
                 g = groups.setdefault(fk, {"items": [], "seeds": [],
@@ -224,28 +290,48 @@ class CodesignService:
                 g["keys"].append(key)
                 g["q"] = max(g["q"], len(dict.fromkeys(slot.engine._layers)))
 
-        # One stacked multi-run dispatch per fuse group: on the JAX backend
-        # every BO round of ALL fused requests' searches is a single fused
-        # device program.  Pad to a whole number of probes (the speculative
-        # strategy's bucketing) so the compiled per-round width stays stable
-        # as sessions' per-tick item counts fluctuate.
+        # One stacked multi-run dispatch per fuse group, submitted to the
+        # executor (inline: runs now; process: workers pull it while the
+        # learner keeps ticking).  On the JAX backend every BO round of ALL
+        # fused requests' searches is a single fused device program.  Pad to
+        # a whole number of probes (the speculative strategy's bucketing) so
+        # the compiled per-round width stays stable as sessions' per-tick
+        # item counts fluctuate.
         for g in groups.values():
             cfg = g["slot"].engine.config
-            rs = optimize_software_fanout(
-                g["items"], cfg.sw, seeds=g["seeds"], engine=cfg.engine,
+            spec = FanoutSearchSpec(
+                items=tuple(g["items"]), seeds=tuple(g["seeds"]),
+                sw=cfg.sw, engine=cfg.engine,
                 pad_to=-(-len(g["items"]) // g["q"]) * g["q"])
+            jid = self._next_job
+            self._next_job += 1
+            self.executor.submit(jid, spec)
+            self._inflight[jid] = g
             self.stats["fused_dispatches"] += 1
             self.stats["fused_items"] += len(g["items"])
-            for (hw, layer), key, r in zip(g["items"], g["keys"], rs):
-                entry = _cache_entry(hw, layer, r)
-                for slot, item in owners[key]:
+
+        # Collect whatever has resolved; block only when every live session
+        # is parked (nothing could step anyway).  Each resolved entry
+        # prefills every owning session's cache and lands in the store.
+        block = bool(self._inflight) and \
+            all(s.waiting for s in self._slots)
+        for jid, entries in self.executor.ready(block=block):
+            g = self._inflight.pop(jid)
+            for key, entry in zip(g["keys"], entries):
+                for slot, item in self._owners.pop(key):
                     slot.engine.cache[item] = entry
+                    slot.waiting.discard(key)
                 if self.store is not None:
                     self.store.put(key, entry)
 
-        # Advance every session one outer stage; retire completed requests.
+        # Advance every session whose results resolved one outer stage;
+        # sessions with work still in flight stay parked.  Retire completed
+        # requests.
         still = []
         for slot in self._slots:
+            if slot.waiting:
+                still.append(slot)
+                continue
             slot.ticks += 1
             if slot.session.step():
                 still.append(slot)

@@ -140,3 +140,57 @@ class DesignStore:
         for _, _, files in os.walk(self.directory):
             n += sum(1 for f in files if f.endswith(".json"))
         return n
+
+    def _entries(self) -> list[tuple[float, int, str]]:
+        """Every stored entry as (mtime, size_bytes, path)."""
+        out = []
+        for root, _, files in os.walk(self.directory):
+            for name in files:
+                if not name.endswith(".json"):
+                    continue
+                path = os.path.join(root, name)
+                try:
+                    st = os.stat(path)
+                except FileNotFoundError:  # concurrent pruner won the race
+                    continue
+                out.append((st.st_mtime, st.st_size, path))
+        return out
+
+    def stats(self) -> dict:
+        """Entry count and byte footprint, total and per shard directory
+        (the two-hex-char key-prefix fan-out)."""
+        shards: dict[str, dict] = {}
+        entries = bytes_total = 0
+        for mtime, size, path in self._entries():
+            shard = os.path.basename(os.path.dirname(path))
+            s = shards.setdefault(shard, {"entries": 0, "bytes": 0})
+            s["entries"] += 1
+            s["bytes"] += size
+            entries += 1
+            bytes_total += size
+        return {"entries": entries, "bytes": bytes_total,
+                "shards": dict(sorted(shards.items()))}
+
+    def prune(self, max_entries: int) -> int:
+        """Evict oldest-first (by mtime, path-tiebroken) until at most
+        `max_entries` entries remain; returns the number removed.
+
+        Per-entry removal is a single `os.unlink`, atomic against the
+        store's atomic-rename writers: a concurrent reader either sees a
+        whole entry or a miss, never a torn one, and evicting is always
+        result-preserving -- a missed key just re-runs its exact-replay
+        search.  Concurrent pruners race benignly (unlink of an
+        already-removed path is ignored)."""
+        if not isinstance(max_entries, int) or isinstance(max_entries, bool) \
+                or max_entries < 0:
+            raise ValueError(
+                f"max_entries must be an int >= 0, got {max_entries!r}")
+        entries = sorted(self._entries())
+        removed = 0
+        for _, _, path in entries[:max(0, len(entries) - max_entries)]:
+            try:
+                os.unlink(path)
+                removed += 1
+            except FileNotFoundError:
+                pass
+        return removed

@@ -77,17 +77,14 @@ class _FanoutSpy:
             self.calls.append(list(items))
             return self._orig(items, *a, **kw)
 
+        # Every executor path -- the scheduler's FanoutSearchSpec.run and
+        # the engine's fanout() alike -- resolves the function through the
+        # module attribute at call time, so patching here sees them all.
         nested_mod.optimize_software_fanout = spy
-        # the scheduler module binds the name at import time too
-        import repro.service.scheduler as sched
-        self._sched_orig = sched.optimize_software_fanout
-        sched.optimize_software_fanout = spy
         return self
 
     def __exit__(self, *exc):
         nested_mod.optimize_software_fanout = self._orig
-        import repro.service.scheduler as sched
-        sched.optimize_software_fanout = self._sched_orig
 
 
 # --- cross-request parity ---------------------------------------------------------
@@ -234,6 +231,126 @@ def test_warm_store_rerun_runs_zero_inner_searches(tmp_path):
         _assert_parity(warm_resp[rid].result, ref, where=rid)
         stats = warm_resp[rid].result.stats
         assert stats["store_misses"] == 0 and stats["store_hits"] > 0
+
+
+# --- executor fan-out + overlapped ticks (ISSUE 8) --------------------------------
+
+
+@pytest.fixture(scope="module")
+def service_pool():
+    """One shared 2-worker pool for the service-executor tests (spawn +
+    import cost paid once)."""
+    from repro.parallel.executor import ProcessExecutor
+
+    ex = ProcessExecutor(n_workers=2)
+    yield ex
+    ex.close()
+
+
+def test_process_executor_service_matches_standalone(service_pool):
+    """The mixed batch through a process-executor service -- overlapped
+    ticks: sessions park while their fused dispatches are in flight, step
+    as results land -- is bit-identical to standalone runs."""
+    refs = [_standalone(m, c) for m, c in MIXED_REQUESTS]
+    svc = CodesignService(ServiceConfig(max_slots=len(MIXED_REQUESTS)),
+                          executor=service_pool)
+    rids = [svc.submit(ServiceRequest(layers=tuple(MODEL_LAYERS[m]), config=c))
+            for m, c in MIXED_REQUESTS]
+    responses = svc.run()
+    for rid, ref in zip(rids, refs):
+        _assert_parity(responses[rid].result, ref, where=rid)
+    assert not svc._inflight and not svc._owners  # nothing leaked in flight
+
+
+def test_mixed_fuse_groups_stagger_under_executor(service_pool):
+    """Staggered admission with INCOMPATIBLE configs (different sw budgets):
+    requests with different sw_cfg must land in separate fuse groups --
+    every submitted spec carries exactly one config, and both configs'
+    groups are dispatched -- and still match standalone parity."""
+    cfg_a = svc_config(0, n_hw=3)
+    cfg_b = dataclasses.replace(
+        svc_config(1, n_hw=4),
+        sw=SWSearchConfig(n_trials=10, n_warmup=4, pool_size=14))
+    reqs = [("dqn", cfg_a), ("mlp", cfg_b), ("dqn", cfg_b),
+            ("mlp", dataclasses.replace(cfg_a, seed=9))]
+    refs = [_standalone(m, c) for m, c in reqs]
+
+    svc = CodesignService(ServiceConfig(max_slots=2), executor=service_pool)
+    submitted = []
+    orig_submit = svc.executor.submit
+
+    def spy_submit(jid, spec):
+        submitted.append(spec)
+        return orig_submit(jid, spec)
+
+    svc.executor.submit = spy_submit
+    try:
+        rids = [svc.submit(ServiceRequest(layers=tuple(MODEL_LAYERS[m]),
+                                          config=c)) for m, c in reqs]
+        responses = svc.run()
+    finally:
+        svc.executor.submit = orig_submit
+    for rid, ref in zip(rids, refs):
+        _assert_parity(responses[rid].result, ref, where=rid)
+    assert len(submitted) == svc.stats["fused_dispatches"]
+    assert {s.sw for s in submitted} == {cfg_a.sw, cfg_b.sw}
+
+
+def test_priority_orders_admission():
+    """max_slots=1 serializes the slot: the high-priority request admits --
+    and with equal budgets completes -- first even when submitted last;
+    FIFO order is preserved within a priority level."""
+    svc = CodesignService(ServiceConfig(max_slots=1))
+    layers = tuple(MODEL_LAYERS["dqn"])
+    lo1 = svc.submit(ServiceRequest(layers=layers, config=svc_config(0, n_hw=3)))
+    lo2 = svc.submit(ServiceRequest(layers=layers, config=svc_config(1, n_hw=3)))
+    hi = svc.submit(ServiceRequest(layers=layers, config=svc_config(2, n_hw=3),
+                                   priority=3))
+    responses = svc.run()
+    assert list(responses) == [hi, lo1, lo2]
+
+
+def test_request_priority_validation_and_roundtrip():
+    req = ServiceRequest(layers=tuple(MODEL_LAYERS["dqn"]), priority=5,
+                         config=svc_config(2), rid="p")
+    assert ServiceRequest.from_json(req.to_json()) == req
+    assert ServiceRequest.from_dict({"layers": "dqn"}).priority == 0
+    with pytest.raises(ValueError, match="priority"):
+        ServiceRequest(layers=tuple(MODEL_LAYERS["dqn"]), priority="high")
+    with pytest.raises(ValueError, match="priority"):
+        ServiceRequest(layers=tuple(MODEL_LAYERS["dqn"]), priority=True)
+
+
+# --- store stats + prune (ISSUE 8) ------------------------------------------------
+
+
+def test_store_stats_and_oldest_first_prune(tmp_path):
+    import os
+
+    store = DesignStore(str(tmp_path))
+    keys = [f"{i:02x}" + "f" * 30 for i in range(6)]  # one shard each
+    for i, key in enumerate(keys):
+        store.put(key, (None, float("inf")))
+        os.utime(store._path(key), (1000.0 + i, 1000.0 + i))
+    st = store.stats()
+    assert st["entries"] == 6 == len(store)
+    assert st["bytes"] > 0
+    assert len(st["shards"]) == 6
+    assert all(s == {"entries": 1, "bytes": st["bytes"] // 6}
+               for s in st["shards"].values())
+
+    assert store.prune(2) == 4  # oldest four evicted
+    assert store.stats()["entries"] == 2
+    assert store.get(keys[-1]) is not None  # newest survive
+    assert store.get(keys[-2]) is not None
+    assert store.get(keys[0]) is None
+    assert store.prune(2) == 0  # idempotent at the bound
+    assert store.prune(0) == 2  # full eviction
+    assert len(store) == 0
+    with pytest.raises(ValueError):
+        store.prune(-1)
+    with pytest.raises(ValueError):
+        store.prune(2.5)
 
 
 # --- session snapshot / resume ----------------------------------------------------
