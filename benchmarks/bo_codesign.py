@@ -579,6 +579,119 @@ def executor_speedup(models=("dqn", "mlp", "dqn", "mlp", "dqn", "mlp"),
     return out
 
 
+def portfolio_speedup(workloads=("smollm_360m", "qwen3_14b",
+                                 "moonshot_v1_16b_a3b"),
+                      n_hw: int = 4, n_sw: int = 25, seed: int = 0,
+                      reps: int = 2) -> dict:
+    """Portfolio co-design (one chip for a weighted workload mix) vs per-model
+    specialist searches, on zoo-generated workload sets.
+
+    Two results ship in one record.  (1) The specialist-vs-portfolio EDP
+    *table*: each specialist chip (tuned for one model) and the uniform
+    portfolio chip, scored on every member's workload (cross entries re-run
+    the stacked inner search on the foreign chip with its content-derived
+    seed).  `gap` condenses it: the geomean EDP penalty of running a
+    specialist chip on the OTHER models vs their own specialists -- the
+    cross-model generalization gap of "Rethinking Co-design" (2102.08619) --
+    next to the portfolio chip's penalty, which should be smaller.  (2) The
+    wall-clock ratio: M standalone specialist searches vs ONE portfolio
+    search over the union stack at the same budgets (outer-loop fan-in: M*L
+    layers share each trial's stacked dispatch and GP fit).  Timing protocol
+    as everywhere: interleaved reps, per-side minimum, warm pass untimed.
+    One-hot parity (`one_hot_parity`) re-runs the portfolio with weight 1 on
+    the first member only and asserts it reproduces that specialist's chip
+    exactly -- the bit-parity contract that pins the whole construction.
+    Numpy numbers gate in CI; jax annotates."""
+    from repro.core.nested import optimize_software_many
+    from repro.workloads import (PortfolioConfig, portfolio_codesign,
+                                 resolve_workload)
+
+    member_layers = {m: tuple(resolve_workload(m)) for m in workloads}
+    out: dict = {"workloads": list(workloads), "n_hw": n_hw, "n_sw": n_sw,
+                 "reps": reps}
+
+    def _total_edp(hw, layers, cfg) -> float:
+        """Best-mapping model EDP of `layers` on a fixed chip, searched with
+        the same content-derived seed the engine would use."""
+        eng = CodesignEngine(cfg)
+        results = optimize_software_many(hw, list(layers), cfg.sw,
+                                         seed=eng.probe_seed(hw),
+                                         engine=cfg.engine)
+        total = 0.0
+        for layer, r in zip(layers, results):
+            if r.best_point is None:
+                return float("inf")
+            total += evaluate(hw, r.best_point, layer).edp
+        return total
+
+    for backend in ("numpy", "jax"):
+        cfg = bench_config("zoo", n_hw, n_sw, seed=seed, backend=backend,
+                           hw_warmup=2)
+
+        def specialists():
+            return {m: CodesignEngine(cfg).run(list(member_layers[m]))
+                    for m in workloads}
+
+        def portfolio():
+            return portfolio_codesign(PortfolioConfig(workloads=workloads),
+                                      cfg)
+
+        spec = specialists()  # warm jit caches / one-time imports, untimed
+        port = portfolio()
+        times: dict[str, list[float]] = {"specialists": [], "portfolio": []}
+        for _ in range(reps):
+            for name, fn in (("specialists", specialists),
+                             ("portfolio", portfolio)):
+                t0 = time.perf_counter()
+                fn()
+                times[name].append(time.perf_counter() - t0)
+        spec_s = min(times["specialists"])
+        port_s = min(times["portfolio"])
+        out[f"{backend}_specialists_s"] = round(spec_s, 3)
+        out[f"{backend}_portfolio_s"] = round(port_s, 3)
+        out[f"{backend}_speedup"] = round(spec_s / port_s, 2)
+
+        if backend != "numpy":
+            continue
+        # --- specialist-vs-portfolio EDP table (numpy, computed once) ------
+        port_edps = port.stats["portfolio_member_edps"]
+        table: dict[str, dict[str, float]] = {}
+        for m in workloads:
+            row = {}
+            for m2 in workloads:
+                row[m2] = (spec[m].best_model_edp if m2 == m else
+                           _total_edp(spec[m].best_hw, member_layers[m2],
+                                      cfg))
+            table[f"specialist:{m}"] = row
+        table["portfolio"] = {m2: port_edps[m2] for m2 in workloads}
+        out["table"] = {chip: {m: _finite(v) for m, v in row.items()}
+                        for chip, row in table.items()}
+
+        def geomean(ratios):
+            ratios = [r for r in ratios]
+            return float(np.exp(np.mean(np.log(ratios)))) if ratios else None
+
+        cross = [table[f"specialist:{m}"][m2] / table[f"specialist:{m2}"][m2]
+                 for m in workloads for m2 in workloads if m2 != m]
+        port_pen = [table["portfolio"][m2] / table[f"specialist:{m2}"][m2]
+                    for m2 in workloads]
+        out["gap"] = {
+            "specialist_cross_penalty": _finite(round(geomean(cross), 3)),
+            "portfolio_penalty": _finite(round(geomean(port_pen), 3)),
+        }
+        # --- one-hot parity: the acceptance-contract bit-parity check ------
+        hot = portfolio_codesign(
+            PortfolioConfig(workloads=workloads,
+                            weights=(1.0,) + (0.0,) * (len(workloads) - 1)),
+            cfg)
+        first = workloads[0]
+        out["one_hot_parity"] = bool(
+            hot.best_hw == spec[first].best_hw
+            and hot.stats["portfolio_member_edps"][first]
+            == spec[first].best_model_edp)
+    return out
+
+
 def run(n_hw: int = 12, n_sw: int = 60, seeds=(0,), quiet: bool = False,
         collect: dict | None = None, backend: str | None = None,
         gp_refit_every: int = 1, config: CodesignConfig | None = None):
@@ -620,7 +733,8 @@ def print_speedups(eng: dict, e2e: dict, lb: dict | None = None,
                    pf: dict | None = None, spec: dict | None = None,
                    prune: dict | None = None,
                    svc: dict | None = None,
-                   execu: dict | None = None) -> None:
+                   execu: dict | None = None,
+                   portfolio: dict | None = None) -> None:
     """CSV lines for the engine/e2e speedup records (shared with run.py)."""
     for name, r in eng["layers"].items():
         print(f"engine,{name},scalar={r['scalar_s']}s,"
@@ -691,6 +805,22 @@ def print_speedups(eng: dict, e2e: dict, lb: dict | None = None,
               f"numpy_speedup={execu['numpy_speedup']}x,"
               f"numpy_rpm={execu['numpy_rpm']},"
               f"numpy_parity={execu['numpy_parity']}")
+    if portfolio is not None:
+        print(f"portfolio,{len(portfolio['workloads'])}models,"
+              f"numpy_specialists={portfolio['numpy_specialists_s']}s,"
+              f"numpy_portfolio={portfolio['numpy_portfolio_s']}s,"
+              f"numpy_speedup={portfolio['numpy_speedup']}x,"
+              f"one_hot_parity={portfolio['one_hot_parity']},"
+              f"spec_cross_penalty="
+              f"{portfolio['gap']['specialist_cross_penalty']},"
+              f"portfolio_penalty={portfolio['gap']['portfolio_penalty']},"
+              f"jax_specialists={portfolio['jax_specialists_s']}s,"
+              f"jax_portfolio={portfolio['jax_portfolio_s']}s,"
+              f"jax_speedup={portfolio['jax_speedup']}x")
+        for chip, row in portfolio["table"].items():
+            cells = ",".join(f"{m}={v:.3e}" if v is not None else f"{m}=inf"
+                             for m, v in row.items())
+            print(f"portfolio_table,{chip},{cells}")
 
 
 if __name__ == "__main__":
@@ -714,7 +844,8 @@ if __name__ == "__main__":
                        probe_fanout_speedup(), speculative_speedup(),
                        prune_speedup(models=(("dqn", 20), ("mlp", 25)),
                                      n_hw=16, reps=1),
-                       service_speedup(reps=1))
+                       service_speedup(reps=1),
+                       portfolio=portfolio_speedup(reps=1))
     elif args.paper:
         run(n_hw=50, n_sw=250, seeds=(0, 1, 2), backend=args.backend,
             gp_refit_every=args.gp_refit_every)

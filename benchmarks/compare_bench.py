@@ -158,6 +158,8 @@ def main() -> int:
         ("service.numpy_speedup", None, True),
         ("service.jax_speedup", None, False),
         ("executor.numpy_speedup", None, True),
+        ("portfolio.numpy_speedup", None, True),
+        ("portfolio.jax_speedup", None, False),
     ):
         if extract is None:
             section, metric = key.split(".", 1)
@@ -166,7 +168,8 @@ def main() -> int:
                        "speculative": "speculative_e2e",
                        "prune": "prune_e2e",
                        "service": "service_e2e",
-                       "executor": "executor_e2e"}[section]
+                       "executor": "executor_e2e",
+                       "portfolio": "portfolio_e2e"}[section]
             olds = _section_speedups(old, section, metric)
             news = _section_speedups(new, section, metric)
         else:

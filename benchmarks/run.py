@@ -90,7 +90,11 @@ def main() -> None:
     print("# process executor -- multiprocess fan-out vs single-process "
           "service (numpy; speedup scales with cores)")
     execu = bo_codesign.executor_speedup()
-    bo_codesign.print_speedups(eng, e2e, lbe, pfe, spec, prune, svc, execu)
+    print("# workload portfolio -- one chip for a weighted zoo mix vs "
+          "per-model specialists (wall + cross-model EDP table)")
+    pfo = bo_codesign.portfolio_speedup()
+    bo_codesign.print_speedups(eng, e2e, lbe, pfe, spec, prune, svc, execu,
+                               portfolio=pfo)
 
     print("# Fig. 5b/5c -- surrogate/acquisition + lambda ablations")
     bo_ablation.run(n_trials=250 if args.paper else 80,
@@ -111,6 +115,7 @@ def main() -> None:
         collect["prune_e2e"] = prune
         collect["service_e2e"] = svc
         collect["executor_e2e"] = execu
+        collect["portfolio_e2e"] = pfo
         collect["backend"] = backend
         collect["paper_budgets"] = bool(args.paper)
         collect["total_s"] = round(total, 1)

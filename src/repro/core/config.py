@@ -364,6 +364,9 @@ class ServiceConfig:
                    (`ExecutorConfig`).  kind="process" also overlaps ticks:
                    sessions whose pending work is still in flight park while
                    sessions with resolved results step immediately.
+    store_max_entries  disk-footprint bound for the design store: after each
+                   request retires, entries beyond this cap are evicted
+                   oldest-first (`DesignStore.prune`).  0 = unbounded.
     """
 
     max_slots: int = 4
@@ -372,12 +375,15 @@ class ServiceConfig:
     cache_entries: int = 65536
     executor: ExecutorConfig = dataclasses.field(
         default_factory=ExecutorConfig)
+    store_max_entries: int = 0
 
     def __post_init__(self) -> None:
         object.__setattr__(self, "executor",
                            _coerce_executor(self.executor, "ServiceConfig"))
         _validate_positive_int("max_slots", self.max_slots)
         _validate_positive_int("cache_entries", self.cache_entries, minimum=0)
+        _validate_positive_int("store_max_entries", self.store_max_entries,
+                               minimum=0)
         if self.store_dir is not None and not isinstance(self.store_dir, str):
             raise ValueError(
                 f"store_dir must be a str or None, got {self.store_dir!r}")

@@ -15,10 +15,12 @@ from repro.parallel.executor import (InlineExecutor, ProcessExecutor,
 from repro.service.scheduler import (CodesignService, ServiceRequest,
                                      ServiceResponse)
 from repro.service.store import DesignStore, design_key
+from repro.workloads.portfolio import PortfolioConfig
 
 __all__ = [
     "CodesignService",
     "DesignStore",
+    "PortfolioConfig",
     "ExecutorConfig",
     "InlineExecutor",
     "ProcessExecutor",

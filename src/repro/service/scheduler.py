@@ -53,7 +53,10 @@ from repro.core.config import CodesignConfig, ServiceConfig
 from repro.core.nested import CodesignEngine, CoDesignResult, SearchSession
 from repro.parallel.executor import make_executor
 from repro.service.store import DesignStore, design_key
-from repro.timeloop.workloads import MODEL_LAYERS, ConvLayer
+from repro.timeloop.workloads import ConvLayer
+from repro.workloads.portfolio import (PortfolioConfig, PortfolioSession,
+                                       make_portfolio_engine)
+from repro.workloads.zoo import resolve_workload
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,15 +67,34 @@ class ServiceRequest:
     `priority` (higher first) orders admission from the queue and the per-tick
     fuse-group submission to the executor; within one priority, admission
     stays FIFO.  Priorities only reorder WHEN work runs -- content-derived
-    seeds keep every request's result identical either way."""
+    seeds keep every request's result identical either way.
 
-    layers: tuple[ConvLayer, ...]
+    A request carries either `layers` OR a `portfolio` (a `PortfolioConfig`
+    naming member workload sets + traffic weights): portfolio requests are
+    served as `PortfolioSession`s over the union of their members' layers."""
+
+    layers: tuple[ConvLayer, ...] = ()
     config: CodesignConfig = dataclasses.field(default_factory=CodesignConfig)
     rid: str | None = None
     priority: int = 0
+    portfolio: PortfolioConfig | None = None
 
     def __post_init__(self) -> None:
-        if not self.layers:
+        if self.portfolio is not None:
+            if not isinstance(self.portfolio, PortfolioConfig):
+                raise ValueError(
+                    f"portfolio must be a PortfolioConfig, got "
+                    f"{self.portfolio!r}")
+            if self.layers:
+                raise ValueError(
+                    "pass either layers or portfolio, not both (a portfolio "
+                    "request searches the union of its members' layers)")
+            if self.config.hw.prune != "off":
+                raise ValueError(
+                    "portfolio requests require config.hw.prune='off' (the "
+                    "EDP lower-bound gate is incompatible with the weighted "
+                    "member objective)")
+        elif not self.layers:
             raise ValueError("request has no layers")
         if not isinstance(self.priority, int) or isinstance(self.priority,
                                                             bool):
@@ -84,19 +106,20 @@ class ServiceRequest:
 
     @classmethod
     def from_dict(cls, d: dict) -> "ServiceRequest":
-        """`layers` is either a model name from `MODEL_LAYERS` ("dqn") or a
-        list of `ConvLayer` field dicts; `config` a `CodesignConfig` dict
-        (sections may be omitted)."""
+        """`layers` is either a workload name -- a paper set ("dqn") or a zoo
+        model ("llama4_maverick_400b_a17b") -- or a list of `ConvLayer` field
+        dicts; `portfolio` a `PortfolioConfig` dict (replaces `layers`);
+        `config` a `CodesignConfig` dict (sections may be omitted)."""
         d = dict(d)
-        layers = d.pop("layers")
+        layers = d.pop("layers", None)
         if isinstance(layers, str):
-            if layers not in MODEL_LAYERS:
-                raise ValueError(f"unknown model {layers!r}; "
-                                 f"known: {sorted(MODEL_LAYERS)}")
-            layers = MODEL_LAYERS[layers]
-        else:
+            layers = resolve_workload(layers)  # raises listing known names
+        elif layers is not None:
             layers = [ConvLayer(**ld) if isinstance(ld, dict) else ld
                       for ld in layers]
+        portfolio = d.pop("portfolio", None)
+        if isinstance(portfolio, dict):
+            portfolio = PortfolioConfig.from_dict(portfolio)
         config = d.pop("config", None)
         if isinstance(config, dict):
             config = CodesignConfig.from_dict(config)
@@ -106,8 +129,8 @@ class ServiceRequest:
         priority = d.pop("priority", 0)
         if d:
             raise ValueError(f"unknown request key(s) {sorted(d)}")
-        return cls(layers=tuple(layers), config=config, rid=rid,
-                   priority=priority)
+        return cls(layers=tuple(layers or ()), config=config, rid=rid,
+                   priority=priority, portfolio=portfolio)
 
     def to_dict(self) -> dict:
         return {
@@ -115,6 +138,8 @@ class ServiceRequest:
             "priority": self.priority,
             "layers": [dataclasses.asdict(layer) for layer in self.layers],
             "config": self.config.to_dict(),
+            "portfolio": (self.portfolio.to_dict()
+                          if self.portfolio is not None else None),
         }
 
     @classmethod
@@ -236,8 +261,13 @@ class CodesignService:
                 # (hw, layer) cache without limit unless the request insists
                 cfg = dataclasses.replace(cfg, engine=dataclasses.replace(
                     cfg.engine, cache_entries=self.config.cache_entries))
-            engine = CodesignEngine(cfg, executor=self.executor)
-            self._slots.append(_Slot(req, engine, engine.session(req.layers)))
+            if req.portfolio is not None:
+                engine = make_portfolio_engine(cfg, executor=self.executor)
+                session = PortfolioSession(engine, req.portfolio)
+            else:
+                engine = CodesignEngine(cfg, executor=self.executor)
+                session = engine.session(req.layers)
+            self._slots.append(_Slot(req, engine, session))
 
     def _fuse_key(self, slot: _Slot):
         """Requests may share one stacked dispatch iff every knob their inner
@@ -345,5 +375,9 @@ class CodesignService:
         result.stats.update(store_hits=slot.store_hits,
                             store_misses=slot.store_misses,
                             latency_s=latency, ticks=slot.ticks)
+        if self.store is not None and self.config.store_max_entries:
+            # Disk-footprint bound for long-lived services: evict oldest
+            # entries beyond the cap as each request retires.
+            self.store.prune(self.config.store_max_entries)
         return ServiceResponse(rid=slot.request.rid, result=result,
                                latency_s=latency, ticks=slot.ticks)

@@ -8,7 +8,9 @@ is the max of compute and per-level bandwidth bottlenecks; the objective is the
 energy-delay product (EDP).
 """
 
-from repro.timeloop.workloads import ConvLayer, PAPER_WORKLOADS, MODEL_LAYERS
+from repro.timeloop.workloads import (ConvLayer, PAPER_WORKLOADS,
+                                      MODEL_LAYERS, SAMPLER_DIVISOR_CAP,
+                                      divisors, sampler_divisors)
 from repro.timeloop.arch import HardwareConfig, EnergyTable, hw_is_valid
 from repro.timeloop.mapping import (Mapping, mapping_is_valid, random_mapping,
                                     sample_constrained_batch)
@@ -26,6 +28,9 @@ __all__ = [
     "ConvLayer",
     "PAPER_WORKLOADS",
     "MODEL_LAYERS",
+    "SAMPLER_DIVISOR_CAP",
+    "divisors",
+    "sampler_divisors",
     "HardwareConfig",
     "EnergyTable",
     "hw_is_valid",

@@ -19,7 +19,7 @@ import dataclasses
 import numpy as np
 
 from repro.timeloop.arch import HardwareConfig
-from repro.timeloop.workloads import DIMS, ConvLayer, divisors
+from repro.timeloop.workloads import DIMS, ConvLayer, sampler_divisors
 
 LEVELS = ("lb", "sx", "sy", "gb", "dram")
 
@@ -124,7 +124,7 @@ def _random_split(rng, n: int, parts: int) -> list[int]:
     out = []
     rem = n
     for i in range(parts - 1):
-        d = divisors(rem)
+        d = sampler_divisors(rem)
         f = int(d[rng.integers(len(d))])
         out.append(f)
         rem //= f
@@ -143,7 +143,7 @@ def random_mapping(rng, hw: HardwareConfig, layer: ConvLayer) -> Mapping:
         elif d == "R" and hw.df_fh == 2:
             lb, rest = n, 1
         else:
-            lb = int(divisors(n)[rng.integers(len(divisors(n)))])
+            lb = int(sampler_divisors(n)[rng.integers(len(sampler_divisors(n)))])
             rest = n // lb
         sx, rest = _pick(rng, rest)
         sy, rest = _pick(rng, rest)
@@ -189,7 +189,8 @@ def sample_constrained_batch(
     rem = np.tile(
         np.array([layer.dim(d) for d in DIMS], dtype=np.int64), (B, 1)
     )
-    divs = [np.array(divisors(layer.dim(d)), dtype=np.int64) for d in DIMS]
+    divs = [np.array(sampler_divisors(layer.dim(d)), dtype=np.int64)
+            for d in DIMS]
 
     pinned = [False] * n_dims
     if hw.df_fw == 2:
@@ -261,7 +262,7 @@ def sample_constrained_batch(
 
 
 def _pick(rng, n: int) -> tuple[int, int]:
-    d = divisors(n)
+    d = sampler_divisors(n)
     f = int(d[rng.integers(len(d))])
     return f, n // f
 
@@ -297,7 +298,7 @@ def constrained_random_mapping(rng, hw: HardwareConfig, layer: ConvLayer) -> Map
         if (d == "S" and hw.df_fw == 2) or (d == "R" and hw.df_fh == 2):
             continue
         cands = []
-        for f in divisors(rem[d]):
+        for f in sampler_divisors(rem[d]):
             trial = list(per_level["lb"])
             trial[di] = f
             if tiles_ok(trial):
@@ -311,7 +312,7 @@ def constrained_random_mapping(rng, hw: HardwareConfig, layer: ConvLayer) -> Map
         for di in rng.permutation(len(DIMS)):
             d = DIMS[di]
             budget = cap // _prod(per_level[axis])
-            cands = [f for f in divisors(rem[d]) if f <= budget]
+            cands = [f for f in sampler_divisors(rem[d]) if f <= budget]
             f = int(cands[rng.integers(len(cands))])
             per_level[axis][di] = f
             rem[d] //= f

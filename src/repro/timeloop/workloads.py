@@ -18,6 +18,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
+import warnings
 
 DIMS = ("R", "S", "P", "Q", "C", "K")
 
@@ -68,8 +69,7 @@ class ConvLayer:
         return self.P * self.Q * self.K
 
     def divisors(self, d: str) -> list[int]:
-        n = self.dim(d)
-        return [i for i in range(1, n + 1) if n % i == 0]
+        return list(divisors(self.dim(d)))
 
 
 def fc(name: str, d_in: int, d_out: int, tokens: int) -> ConvLayer:
@@ -140,3 +140,35 @@ def divisors(n: int) -> tuple[int, ...]:
             if i != n // i:
                 large.append(n // i)
     return tuple(small + large[::-1])
+
+
+# The zoo workload generator (repro.workloads.zoo) produces FC dims far outside
+# the paper's (d_model 5120, vocab-shaped K ~ 2e5).  Their divisor *counts* are
+# what the constrained samplers scale with -- every per-dim choice builds a
+# (pool, n_divisors) candidate mask -- so a highly composite dim (e.g. 720720:
+# 240 divisors) would quietly blow the sampler up.  `sampler_divisors` caps the
+# ladder the samplers draw from; every paper and zoo dim today sits under the
+# cap, so the guard only fires on genuinely pathological shapes.
+SAMPLER_DIVISOR_CAP = 128
+
+
+@functools.lru_cache(maxsize=4096)
+def sampler_divisors(n: int) -> tuple[int, ...]:
+    """Divisor ladder for the mapping samplers: identical to `divisors(n)` up
+    to `SAMPLER_DIVISOR_CAP` entries; beyond that, a geometric subsample that
+    always keeps 1 and n (so factor chains still terminate: the outermost
+    level absorbs whatever remainder the sampled factors leave).  Any divisor
+    subset yields structurally valid mappings -- capping only narrows the
+    sampled tilings -- and the cap is announced loudly, once per dim."""
+    ds = divisors(n)
+    if len(ds) <= SAMPLER_DIVISOR_CAP:
+        return ds
+    warnings.warn(
+        f"dim {n} has {len(ds)} divisors (> SAMPLER_DIVISOR_CAP="
+        f"{SAMPLER_DIVISOR_CAP}); the mapping samplers draw from a geometric "
+        f"subsample of {SAMPLER_DIVISOR_CAP} divisors (1 and {n} kept), so "
+        "some tilings of this dim are unreachable", RuntimeWarning,
+        stacklevel=2)
+    idx = {round(i * (len(ds) - 1) / (SAMPLER_DIVISOR_CAP - 1))
+           for i in range(SAMPLER_DIVISOR_CAP)}
+    return tuple(ds[i] for i in sorted(idx))

@@ -1,0 +1,35 @@
+"""Workload zoo + portfolio co-design.
+
+Two halves, layered ON the search core (repro.core is untouched):
+
+- `zoo`: converts any `ModelConfig` in `repro.configs` into a named
+  `ConvLayer` workload set (attention projections, MoE expert FFNs, recurrent
+  gate matmuls, the rglru temporal conv) via a per-block-kind extractor
+  registry, MACs-cross-checked against `repro.models.flops.forward_flops`.
+- `portfolio`: one hardware config scored against a weighted mix of workload
+  sets -- each outer trial fans the union of all members' layers into ONE
+  stacked inner dispatch, scored by weighted-sum log-EDP, Pareto front in
+  `CoDesignResult.stats`.
+"""
+
+from repro.workloads.portfolio import (PortfolioConfig, PortfolioSession,
+                                       make_portfolio_engine,
+                                       portfolio_codesign, portfolio_session)
+from repro.workloads.zoo import (MACS_RTOL, ZOO_NAMES, ZooWorkload,
+                                 known_workloads, resolve_workload,
+                                 workload_set, zoo_workload)
+
+__all__ = [
+    "MACS_RTOL",
+    "ZOO_NAMES",
+    "ZooWorkload",
+    "known_workloads",
+    "resolve_workload",
+    "workload_set",
+    "zoo_workload",
+    "PortfolioConfig",
+    "PortfolioSession",
+    "make_portfolio_engine",
+    "portfolio_codesign",
+    "portfolio_session",
+]
