@@ -53,6 +53,15 @@ ratios are as robust as the hot-path ones:
                                       fan-out on multi-core CI hardware, but
                                       both sides of any one record share a
                                       machine so the cross-PR ratio holds)
+    transfer_e2e.numpy_speedup       (gating: a repeated/near-identical
+                                      request sequence against a warmed
+                                      design store + trial history with
+                                      hw.warm_start on, vs served cold; the
+                                      record also carries the parity /
+                                      never-worse booleans asserted
+                                      in-benchmark and the store/warm-hit
+                                      counts)
+    transfer_e2e.jax_speedup         (annotating only, like jax_speedup)
 
 A missing/invalid previous record is not an error -- first runs and artifact
 expiry just skip the gate with a notice.  Records written before a metric
@@ -160,6 +169,8 @@ def main() -> int:
         ("executor.numpy_speedup", None, True),
         ("portfolio.numpy_speedup", None, True),
         ("portfolio.jax_speedup", None, False),
+        ("transfer.numpy_speedup", None, True),
+        ("transfer.jax_speedup", None, False),
     ):
         if extract is None:
             section, metric = key.split(".", 1)
@@ -169,7 +180,8 @@ def main() -> int:
                        "prune": "prune_e2e",
                        "service": "service_e2e",
                        "executor": "executor_e2e",
-                       "portfolio": "portfolio_e2e"}[section]
+                       "portfolio": "portfolio_e2e",
+                       "transfer": "transfer_e2e"}[section]
             olds = _section_speedups(old, section, metric)
             news = _section_speedups(new, section, metric)
         else:

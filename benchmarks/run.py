@@ -93,8 +93,11 @@ def main() -> None:
     print("# workload portfolio -- one chip for a weighted zoo mix vs "
           "per-model specialists (wall + cross-model EDP table)")
     pfo = bo_codesign.portfolio_speedup()
+    print("# cross-run transfer -- warmed store + trial history with "
+          "hw.warm_start on vs served cold (per backend)")
+    xfer = bo_codesign.transfer_speedup()
     bo_codesign.print_speedups(eng, e2e, lbe, pfe, spec, prune, svc, execu,
-                               portfolio=pfo)
+                               portfolio=pfo, transfer=xfer)
 
     print("# Fig. 5b/5c -- surrogate/acquisition + lambda ablations")
     bo_ablation.run(n_trials=250 if args.paper else 80,
@@ -116,6 +119,7 @@ def main() -> None:
         collect["service_e2e"] = svc
         collect["executor_e2e"] = execu
         collect["portfolio_e2e"] = pfo
+        collect["transfer_e2e"] = xfer
         collect["backend"] = backend
         collect["paper_budgets"] = bool(args.paper)
         collect["total_s"] = round(total, 1)

@@ -1,6 +1,6 @@
 """Co-design as a service: many tenants' nested searches, one fused engine.
 
-    PYTHONPATH=src python examples/codesign_service.py [--tiny]
+    PYTHONPATH=src python examples/codesign_service.py [--tiny] [--warm-start]
         [--store-dir DIR] [--max-slots N] [--no-fuse]
         [--backend numpy|jax] [--executor inline|process] [--workers N]
 
@@ -15,9 +15,20 @@ bit-identical to running that request standalone through
 With `--store-dir`, finished (hw, layer) searches persist in a
 content-addressed design store and the batch is resubmitted once more: the
 warm pass answers every request from disk without a single inner search.
+
+With `--warm-start`, the service additionally keeps a cross-run trial history
+and runs a third pass with `HWSearchConfig.warm_start` on: each request's
+outer GP starts from the cold pass's recorded trials, exact store misses fall
+back to approximate (nearest stored hardware) warm starts, and the printout
+adds the consumed prior rows + warm hits plus a per-request cold-vs-warm
+incumbent comparison.  Priors reshape the outer acquisition, so warm results
+can differ from cold; what stays exact is the replay contract (pass 2 is
+asserted bit-identical to pass 1) and that approximate hits always carry
+exactly evaluated EDPs.
 """
 
 import argparse
+import dataclasses
 import shutil
 import tempfile
 
@@ -46,23 +57,35 @@ def build_requests(args) -> list[ServiceRequest]:
     return reqs
 
 
-def serve(requests, service_config, executor=None) -> None:
+def serve(requests, service_config, executor=None, baseline=None) -> dict:
     svc = CodesignService(service_config, executor=executor)
     rids = [svc.submit(r) for r in requests]
     responses = svc.run()
     for rid in rids:
         resp = responses[rid]
         stats = resp.result.stats
+        transfer = (f"  prior {stats['prior_rows']}  "
+                    f"warm {stats['warm_hits']}"
+                    if stats.get("prior_rows") or stats.get("warm_hits")
+                    else "")
+        if baseline is not None:
+            cold = baseline[rid].result.best_model_edp
+            warm = resp.result.best_model_edp
+            transfer += ("  vs cold: " + ("better" if warm < cold else
+                                          "equal" if warm == cold else
+                                          "worse"))
         print(f"  {rid}: model EDP {resp.result.best_model_edp:.3e}  "
               f"latency {resp.latency_s:.2f}s  ticks {resp.ticks}  "
               f"store {stats['store_hits']}h/{stats['store_misses']}m  "
-              f"cache {stats['cache_hits']}h/{stats['cache_misses']}m")
+              f"cache {stats['cache_hits']}h/{stats['cache_misses']}m"
+              f"{transfer}")
     total = max(r.latency_s for r in responses.values())
     print(f"  throughput: {len(rids)} requests in {total:.2f}s "
           f"({len(rids) / total * 60:.1f} req/min), "
           f"{svc.stats['fused_dispatches']} fused dispatches over "
           f"{svc.stats['ticks']} ticks, "
           f"{svc.stats['deduped_items']} searches deduped across requests")
+    return responses
 
 
 def main():
@@ -78,6 +101,12 @@ def main():
     ap.add_argument("--store-dir", default=None, metavar="DIR",
                     help="persistent design-store directory (default: a "
                          "temporary one, removed on exit)")
+    ap.add_argument("--warm-start", action="store_true",
+                    help="keep a cross-run trial history and run a third "
+                         "pass with hw.warm_start on: outer GPs seeded from "
+                         "the cold pass's recorded trials, approximate "
+                         "(nearest stored hardware) warm starts on exact "
+                         "store misses")
     ap.add_argument("--executor", default="inline", choices=EXECUTOR_KINDS,
                     help="where fused dispatches run: in-process (inline) or "
                          "on a worker-process pool (results are bit-identical "
@@ -88,8 +117,10 @@ def main():
     args = ap.parse_args()
 
     store_dir = args.store_dir or tempfile.mkdtemp(prefix="design_store_")
+    history_dir = (tempfile.mkdtemp(prefix="trial_history_")
+                   if args.warm_start else None)
     sc = ServiceConfig(max_slots=args.max_slots, fuse=not args.no_fuse,
-                       store_dir=store_dir,
+                       store_dir=store_dir, history_dir=history_dir,
                        executor=ExecutorConfig(kind=args.executor,
                                                n_workers=args.workers))
     requests = build_requests(args)
@@ -101,15 +132,32 @@ def main():
         print(f"cold pass: {len(requests)} concurrent requests, "
               f"max_slots={sc.max_slots}, fuse={sc.fuse}, "
               f"executor={executor.kind}, store={store_dir}")
-        serve(requests, sc, executor)
+        cold = serve(requests, sc, executor)
 
         print("warm pass: same workload resubmitted -- every (hw, layer) "
               "search replays from the design store, zero inner searches")
-        serve(requests, sc, executor)
+        replay = serve(requests, sc, executor)
+        assert all(replay[rid].result.best_model_edp
+                   == cold[rid].result.best_model_edp
+                   for rid in cold), "store replay changed a result"
+
+        if args.warm_start:
+            print("warm-start pass: hw.warm_start on -- outer GPs seeded "
+                  "from the recorded trial history, approximate warm starts "
+                  "on exact store misses")
+            warm_requests = [
+                dataclasses.replace(
+                    r, config=dataclasses.replace(
+                        r.config, hw=dataclasses.replace(
+                            r.config.hw, warm_start=True)))
+                for r in requests]
+            serve(warm_requests, sc, executor, baseline=cold)
     finally:
         executor.close()
         if args.store_dir is None:
             shutil.rmtree(store_dir, ignore_errors=True)
+        if history_dir is not None:
+            shutil.rmtree(history_dir, ignore_errors=True)
 
 
 if __name__ == "__main__":

@@ -61,7 +61,8 @@ import numpy as np
 
 from repro.core.acquisition import make_acquisition, make_acquisition_device
 from repro.core.config import BACKENDS, SearchConfig, SWSearchConfig
-from repro.core.gp import GP, GPClassifier, GPClassifierStack, GPStack
+from repro.core.gp import (GP, GPClassifier, GPClassifierStack, GPStack,
+                           apply_prior_mean)
 from repro.core.trees import RandomForestSurrogate
 
 
@@ -198,6 +199,8 @@ class BOLoop:
         gp_refit_every: int = 1,
         gp_rank1: bool = False,
         callback: Callable[[int, BOResult], None] | None = None,
+        prior: dict | None = None,
+        prior_mean_fn: Callable | None = None,
         **overrides,
     ):
         cfg = _resolve_search_config(config, overrides)
@@ -228,6 +231,13 @@ class BOLoop:
         self._y_feas: list[float] = []
         self._X_all: list[np.ndarray] = []
         self._feas_all: list[bool] = []
+        # Residual prior mean (cross-run transfer): when `prior_mean_fn` is
+        # set the surrogate is fit on y - m(x) and `plan()` adds m back via
+        # `apply_prior_mean`, so `_m_feas` mirrors `_y_feas` row-for-row with
+        # the m value of each feasible observation.
+        self._prior_mean_fn = prior_mean_fn
+        self._m_feas: list[float] = []
+        self.n_prior = 0
         self.result = BOResult(None, -np.inf, [], [], [])
 
         self._use_batch = bool(getattr(space, "supports_batch", False))
@@ -238,6 +248,12 @@ class BOLoop:
             and bool(getattr(space, "supports_device", False))
             and cfg.surrogate in ("gp_linear", "gp_se")
         )
+        if prior_mean_fn is not None and self._use_device:
+            raise ValueError(
+                "prior_mean_fn is host-path only: the fused device scoring "
+                "path never materializes host posterior means to offset")
+        if prior is not None:
+            self._load_prior(prior)
 
         self._model = None
         self._classifier = None
@@ -256,6 +272,66 @@ class BOLoop:
     def done(self) -> bool:
         return self._warmed and len(self.result.history) >= self.cfg.n_trials
 
+    # --- prior observations (cross-run transfer) ---------------------------------
+
+    def _load_prior(self, prior: dict) -> None:
+        """Seed the surrogate/classifier data lists with prior observations
+        (cross-run transfer) before the first warmup probe.
+
+        `prior` carries feature-space rows only -- no candidate points -- so
+        priors shape the *surrogate* (and the feasibility classifier) without
+        entering `result`: the incumbent, histories, and trial budget all
+        still come exclusively from this run's own evaluations.  Required
+        keys: "X_feas" (feasible feature rows), "y_feas" (their utilities),
+        "X_all" (every prior row), "feas_all" (their feasibility flags).
+        When `prior_mean_fn` is set, "m_feas" (the prior mean at each
+        feasible row) is required too -- feature rows cannot be pushed back
+        through a point-wise mean function.  An all-empty prior is exactly
+        equivalent to no prior."""
+        required = ("X_feas", "y_feas", "X_all", "feas_all")
+        missing = [k for k in required if k not in prior]
+        if missing:
+            raise ValueError(f"prior is missing keys {missing}; "
+                             f"required: {list(required)}")
+        X_feas = [np.asarray(x, dtype=np.float64) for x in prior["X_feas"]]
+        y_feas = [float(v) for v in prior["y_feas"]]
+        X_all = [np.asarray(x, dtype=np.float64) for x in prior["X_all"]]
+        feas_all = [bool(f) for f in prior["feas_all"]]
+        if len(X_feas) != len(y_feas):
+            raise ValueError(
+                f"prior X_feas/y_feas length mismatch: "
+                f"{len(X_feas)} != {len(y_feas)}")
+        if len(X_all) != len(feas_all):
+            raise ValueError(
+                f"prior X_all/feas_all length mismatch: "
+                f"{len(X_all)} != {len(feas_all)}")
+        if len(X_feas) != sum(feas_all):
+            raise ValueError(
+                f"prior feasible-row count mismatch: {len(X_feas)} X_feas "
+                f"rows but {sum(feas_all)} feasible flags in feas_all")
+        dim = getattr(self.space, "feature_dim", None)
+        for row in X_feas + X_all:
+            if row.ndim != 1 or (dim is not None and row.shape != (dim,)):
+                raise ValueError(
+                    f"prior feature row has shape {row.shape}; expected a "
+                    f"1-d row{f' of dim {dim}' if dim is not None else ''}")
+        if self._prior_mean_fn is not None:
+            if "m_feas" not in prior:
+                raise ValueError(
+                    "prior_mean_fn is set but prior has no 'm_feas': prior "
+                    "mean values cannot be recovered from feature rows")
+            m_feas = [float(v) for v in prior["m_feas"]]
+            if len(m_feas) != len(X_feas):
+                raise ValueError(
+                    f"prior m_feas/X_feas length mismatch: "
+                    f"{len(m_feas)} != {len(X_feas)}")
+            self._m_feas.extend(m_feas)
+        self._X_feas.extend(X_feas)
+        self._y_feas.extend(y_feas)
+        self._X_all.extend(X_all)
+        self._feas_all.extend(feas_all)
+        self.n_prior = len(X_all)
+
     # --- inner helpers (the historical closures, verbatim) -----------------------
 
     def _observe(self, point, feats=None, outcome=None) -> None:
@@ -272,6 +348,9 @@ class BOLoop:
         if feasible:
             self._X_feas.append(feats)
             self._y_feas.append(value)
+            if self._prior_mean_fn is not None:
+                self._m_feas.append(
+                    float(np.asarray(self._prior_mean_fn([point]))[0]))
             if value > result.best_value:
                 result.best_value, result.best_point = value, point
             result.values.append(value)
@@ -291,6 +370,8 @@ class BOLoop:
             return
         v = self.result.values[-1]
         if np.isfinite(v):
+            if self._prior_mean_fn is not None:
+                v = v - self._m_feas[-1]  # the GP holds residuals y - m(x)
             self._model.append_observation(np.asarray(feat_row, np.float64), v)
 
     def _update_elites(self, pool, utility, i_best) -> None:
@@ -333,6 +414,8 @@ class BOLoop:
             return
         Xf = np.stack(self._X_feas)
         yf = np.asarray(self._y_feas)
+        if self._prior_mean_fn is not None:
+            yf = yf - np.asarray(self._m_feas)  # fit residuals y - m(x)
         if surrogate == "gp_linear":
             self._model = GP(kind="linear", noisy=self.noisy).fit(Xf, yf)
         elif surrogate == "gp_se":
@@ -450,6 +533,10 @@ class BOLoop:
         if self._can_freeze and not frozen and isinstance(pool, list):
             self._window_pool, self._window_feats = pool, feats
         mu, var = self._model.posterior(feats)
+        if self._prior_mean_fn is not None:
+            # The surrogate holds residuals y - m(x); put m back before the
+            # acquisition so utilities compare against the true incumbent.
+            mu = apply_prior_mean(mu, self._prior_mean_fn(pool))
         utility = self._acq(mu, var, self.result.best_value)
         if self._classifier is not None:
             # prob_feasible returns a host array; the asarray keeps the
@@ -546,6 +633,8 @@ class BOLoop:
             "y_feas": list(self._y_feas),
             "X_all": [np.array(x) for x in self._X_all],
             "feas_all": list(self._feas_all),
+            "m_feas": list(self._m_feas),
+            "n_prior": self.n_prior,
             "result": {
                 "best_point": r.best_point, "best_value": r.best_value,
                 "history": list(r.history), "values": list(r.values),
@@ -572,6 +661,8 @@ class BOLoop:
         self._y_feas = list(snap["y_feas"])
         self._X_all = [np.array(x) for x in snap["X_all"]]
         self._feas_all = list(snap["feas_all"])
+        self._m_feas = list(snap.get("m_feas", []))
+        self.n_prior = int(snap.get("n_prior", 0))
         rs = snap["result"]
         self.result = BOResult(
             best_point=rs["best_point"], best_value=rs["best_value"],
@@ -592,6 +683,8 @@ class BOLoop:
             n = fit["n_feas"]
             Xf = np.stack(self._X_feas[:n])
             yf = np.asarray(self._y_feas[:n])
+            if self._prior_mean_fn is not None:
+                yf = yf - np.asarray(self._m_feas[:n])
             surrogate = self.cfg.surrogate
             if surrogate == "gp_linear":
                 self._model = GP(kind="linear", noisy=self.noisy).fit(Xf, yf)
@@ -610,7 +703,10 @@ class BOLoop:
             # appended through rank-1 updates (only scored trials run once a
             # model exists, and only under gp_rank1): replay them.
             if self.gp_rank1 and isinstance(self._model, GP):
-                for row, v in zip(self._X_feas[n:], self._y_feas[n:]):
+                for i, (row, v) in enumerate(
+                        zip(self._X_feas[n:], self._y_feas[n:])):
+                    if self._prior_mean_fn is not None:
+                        v = v - self._m_feas[n + i]
                     self._model.append_observation(
                         np.asarray(row, np.float64), float(v))
         return self

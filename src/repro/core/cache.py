@@ -45,6 +45,11 @@ def counters_snapshot() -> dict[str, int]:
     return dict(COUNTERS)
 
 
+# `LRUCache._primed` sentinel: "no membership probe pending".  A distinct
+# object (not None) so priming is unambiguous even for None keys.
+_NO_KEY = object()
+
+
 class LRUCache(MutableMapping):
     """Dict-compatible mapping with optional LRU eviction and traffic
     counters.  `maxsize=0` (default) disables eviction -- the mapping then
@@ -53,7 +58,14 @@ class LRUCache(MutableMapping):
     Lookups (`[]`, `.get`, `in`) refresh recency and tally `hits`/`misses`;
     insertion beyond `maxsize` evicts the least-recently-used entry and
     tallies `evictions`.
-    """
+
+    One logical lookup counts once: the engine's idiomatic
+    `if key in cache: use(cache[key])` probe is a single lookup, so the
+    membership test *primes* the key and the immediately following `[]` read
+    of that same key skips its tally (any other operation in between clears
+    the prime).  Without this, `__contains__` and `__getitem__` each tallied
+    and the `cache_*` stats in `CoDesignResult` double-counted every
+    in-then-read access."""
 
     def __init__(self, maxsize: int = 0):
         if maxsize < 0:
@@ -63,18 +75,24 @@ class LRUCache(MutableMapping):
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self._primed: Any = _NO_KEY
 
     def __getitem__(self, key) -> Any:
+        primed, self._primed = self._primed, _NO_KEY
+        counted = primed is _NO_KEY or primed != key
         try:
             value = self._data[key]
         except KeyError:
-            self.misses += 1
+            if counted:
+                self.misses += 1
             raise
         self._data.move_to_end(key)
-        self.hits += 1
+        if counted:
+            self.hits += 1
         return value
 
     def __contains__(self, key) -> bool:
+        self._primed = key
         if key in self._data:
             self._data.move_to_end(key)
             self.hits += 1
@@ -83,6 +101,7 @@ class LRUCache(MutableMapping):
         return False
 
     def __setitem__(self, key, value) -> None:
+        self._primed = _NO_KEY
         self._data[key] = value
         self._data.move_to_end(key)
         if self.maxsize and len(self._data) > self.maxsize:
@@ -90,6 +109,7 @@ class LRUCache(MutableMapping):
             self.evictions += 1
 
     def __delitem__(self, key) -> None:
+        self._primed = _NO_KEY
         del self._data[key]
 
     def __iter__(self) -> Iterator:
@@ -140,6 +160,16 @@ class SlotCache:
         return None
 
     def put(self, key, value) -> None:
+        # Replace in place on a re-put of an already-present key (and refresh
+        # its recency): appending a duplicate slot would make `get` serve the
+        # stale older slot and could push a *distinct* live entry out of the
+        # memo.
+        for i, (k, _) in enumerate(self._slots):
+            if k is key:
+                self._slots[i] = (key, value)
+                if i != len(self._slots) - 1:
+                    self._slots.append(self._slots.pop(i))
+                return
         self._slots.append((key, value))
         if len(self._slots) > self.capacity:
             self._slots.pop(0)

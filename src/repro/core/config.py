@@ -124,7 +124,24 @@ class HWSearchConfig(SearchConfig):
     for "aggressive" because redirecting a doomed selection into a different
     full search is wall-clock neutral -- the measured speedup of "safe"
     comes from censoring doomed selections, which pool removal would
-    starve."""
+    starve.
+
+    warm_start: cross-run transfer (`repro.service`).  When True, a service
+    request consumes the workload set's recorded trial history
+    (`TrialHistory`, keyed by `history_key`) as prior observations seeding
+    the outer GP/classifier before the first warmup probe, and exact
+    design-store misses fall back to an approximate nearest-neighbor lookup
+    whose mapping seeds the inner search as a warm-start incumbent
+    (re-evaluated exactly on the target hardware; `warm_hits` in stats).
+    With no history and no store the search is bit-identical to
+    warm_start=False -- priors only ever ADD surrogate data.
+    warm_start_rows: cap on consumed prior rows (most recent first).
+    warm_start_bound_mean: additionally center the outer GP on the EDP
+    lower bound (`timeloop.bounds`: m(x) = -log10(sum of per-layer bounds),
+    an ordering-accurate upper bound on utility); the GP fits residuals
+    y - m(x) and posteriors add m back.  Off by default: it changes the
+    search trajectory even without history (an opt-in prior model, not a
+    pure transfer knob)."""
 
     n_trials: int = 50
     n_warmup: int = 5
@@ -133,6 +150,9 @@ class HWSearchConfig(SearchConfig):
     elite_k: int = 4  # carry-forward on by default for the outer loop
     prune: str = "off"
     prune_margin: float = 1.0
+    warm_start: bool = False
+    warm_start_rows: int = 256
+    warm_start_bound_mean: bool = False
 
     def __post_init__(self) -> None:
         super().__post_init__()
@@ -144,6 +164,11 @@ class HWSearchConfig(SearchConfig):
                 and self.prune_margin > 0.0):
             raise ValueError(
                 f"prune_margin must be a number > 0, got {self.prune_margin!r}")
+        for field in ("warm_start", "warm_start_bound_mean"):
+            if not isinstance(getattr(self, field), bool):
+                raise ValueError(
+                    f"{field} must be a bool, got {getattr(self, field)!r}")
+        _validate_positive_int("warm_start_rows", self.warm_start_rows)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -367,6 +392,12 @@ class ServiceConfig:
     store_max_entries  disk-footprint bound for the design store: after each
                    request retires, entries beyond this cap are evicted
                    oldest-first (`DesignStore.prune`).  0 = unbounded.
+    history_dir    cross-run trial-history directory (None: no history).
+                   When set, every non-portfolio request appends its finished
+                   outer trials under its workload set's `history_key`, and
+                   requests with `HWSearchConfig.warm_start` replay those
+                   rows as outer-GP prior observations
+                   (`repro.service.store.TrialHistory`).
     """
 
     max_slots: int = 4
@@ -376,6 +407,7 @@ class ServiceConfig:
     executor: ExecutorConfig = dataclasses.field(
         default_factory=ExecutorConfig)
     store_max_entries: int = 0
+    history_dir: str | None = None
 
     def __post_init__(self) -> None:
         object.__setattr__(self, "executor",
@@ -387,6 +419,10 @@ class ServiceConfig:
         if self.store_dir is not None and not isinstance(self.store_dir, str):
             raise ValueError(
                 f"store_dir must be a str or None, got {self.store_dir!r}")
+        if self.history_dir is not None \
+                and not isinstance(self.history_dir, str):
+            raise ValueError(
+                f"history_dir must be a str or None, got {self.history_dir!r}")
 
     def to_dict(self) -> dict[str, Any]:
         return dataclasses.asdict(self)

@@ -267,6 +267,21 @@ def _posterior(params, X, y, mask, Xs, kind):
     return mu, var
 
 
+def apply_prior_mean(mu, ms):
+    """Add an externally supplied prior-mean offset `ms` to posterior means
+    `mu` (variances are untouched).
+
+    Residual prior-mean contract: the caller fits the GP on residuals
+    y - m(x) and adds m back at query time via this helper.  Any
+    *ordering-accurate* mean (one that ranks points like the true objective,
+    e.g. -log10 of the analytic EDP lower bound, ROADMAP "the bound is
+    ordering-accurate") shifts the acquisition landscape toward genuinely
+    promising hardware without touching the calibrated posterior variances
+    -- the GP only has to learn the (smoother) gap between bound and
+    achieved utility."""
+    return np.asarray(mu) + np.asarray(ms, dtype=np.float64)
+
+
 @dataclasses.dataclass
 class GP:
     """Exact GP regressor.

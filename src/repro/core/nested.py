@@ -58,7 +58,7 @@ from repro.core.config import (CodesignConfig, EngineConfig, SWSearchConfig,
                                config_from_legacy_kwargs)
 from repro.core.hwspace import HardwareSpace
 from repro.core.swspace import SoftwareSpace, fanout_spaces
-from repro.timeloop.arch import HardwareConfig
+from repro.timeloop.arch import HardwareConfig, hw_from_tuple
 from repro.timeloop.mapping import Mapping
 from repro.timeloop.model import evaluate
 from repro.timeloop.workloads import ConvLayer
@@ -571,11 +571,16 @@ class CodesignEngine:
 
     def session(self, layers: Sequence[ConvLayer],
                 hw_callback: Callable[[int, "BOResult"], None] | None = None,
+                *, prior: Sequence[dict] | None = None,
+                trial_log: Callable[[dict], None] | None = None,
                 ) -> "SearchSession":
         """Open a resumable `SearchSession` over `layers` (one at a time per
         engine: the session wires the engine's gate/stats/layer bookkeeping
-        to itself)."""
-        return SearchSession(self, layers, hw_callback=hw_callback)
+        to itself).  `prior` seeds the outer GP with recorded trial-history
+        rows and `trial_log` receives this session's finished outer trials
+        (cross-run transfer; see `repro.service.store.TrialHistory`)."""
+        return SearchSession(self, layers, hw_callback=hw_callback,
+                             prior=prior, trial_log=trial_log)
 
     def run(self, layers: Sequence[ConvLayer],
             hw_callback: Callable[[int, "BOResult"], None] | None = None,
@@ -616,9 +621,12 @@ class SearchSession:
     """
 
     def __init__(self, engine: CodesignEngine, layers: Sequence[ConvLayer],
-                 hw_callback: Callable[[int, "BOResult"], None] | None = None):
+                 hw_callback: Callable[[int, "BOResult"], None] | None = None,
+                 *, prior: Sequence[dict] | None = None,
+                 trial_log: Callable[[dict], None] | None = None):
         self.engine = engine
         cfg = engine.config
+        self._trial_log = trial_log
         engine._layers = list(layers)
         engine.stats = {"spec_evaluated": 0, "spec_hits": 0,
                         "prune_considered": 0, "prune_pruned": 0,
@@ -639,6 +647,15 @@ class SearchSession:
             prefetch_topk=self._spec_k,
             prune_fn=engine._make_prune_fn(self.best),
         )
+        # Cross-run transfer: an EDP-lower-bound prior mean (opt-in) and the
+        # replayed trial history, both feeding the outer loop's surrogate
+        # before its first warmup probe.  With no prior and the bound mean
+        # off, every argument below matches the historical construction
+        # exactly (warm_start with an empty history is bit-identical to
+        # cold).
+        mean_fn = (self._make_bound_mean_fn()
+                   if cfg.hw.warm_start_bound_mean else None)
+        self.n_prior = len(prior) if prior else 0
         self.loop = BOLoop(
             self.space, cfg.hw,
             noisy=True,  # inner search stochasticity (paper §4.2)
@@ -646,10 +663,89 @@ class SearchSession:
             gp_refit_every=cfg.engine.hw_gp_refit_every,
             gp_rank1=cfg.engine.gp_rank1_updates,
             callback=hw_callback,
+            prior=self._prior_from_rows(prior, mean_fn) if prior else None,
+            prior_mean_fn=mean_fn,
         )
         self._cache_counts0 = (engine.cache.hits, engine.cache.misses,
                                engine.cache.evictions)
         self._feat_counts0 = counters_snapshot()
+
+    def _make_bound_mean_fn(self):
+        """Prior-mean closure for the outer GP (`hw.warm_start_bound_mean`):
+        m(hw) = -log10(sum of per-layer EDP lower bounds), the
+        ordering-accurate utility upper bound of `timeloop.bounds`, computed
+        through the same batched bound paths as `_make_prune_fn` (identity
+        memo included: the frozen-window pool re-presents across trials)."""
+        engine = self.engine
+        layt = None          # (layb, caps) packed lazily, as in _make_prune_fn
+        memo = [None, None]  # one-slot (pool identity, m values) memo
+
+        def mean_fn(pool) -> np.ndarray:
+            nonlocal layt
+            if memo[0] is pool:
+                return memo[1]
+            if engine.backend == "jax":
+                from repro.timeloop.batch_jax import edp_lower_bounds_device
+                lbs = np.asarray(edp_lower_bounds_device(pool, engine._layers))
+            else:
+                from repro.timeloop.batch import edp_lower_bounds_batch
+                from repro.timeloop.bounds import (hw_bound_vecs, layer_caps,
+                                                   layer_bound_vecs)
+                if layt is None:
+                    layt = (layer_bound_vecs(engine._layers),
+                            layer_caps(engine._layers))
+                lbs = edp_lower_bounds_batch(hw_bound_vecs(pool), *layt)
+            memo[0] = pool
+            memo[1] = -np.log10(np.asarray(lbs, dtype=np.float64).sum(axis=1))
+            return memo[1]
+
+        return mean_fn
+
+    def _prior_from_rows(self, rows: Sequence[dict], mean_fn) -> dict:
+        """Convert trial-history rows (`TrialHistory.load`) into the
+        `BOLoop` prior dict: every row enters the classifier data, feasible
+        rows additionally enter the objective GP's (and, when the bound mean
+        is on, their m values are recomputed from the recorded hardware
+        through the same `mean_fn` live trials use)."""
+        X_feas: list[np.ndarray] = []
+        y_feas: list[float] = []
+        hw_feas: list[HardwareConfig] = []
+        X_all: list[np.ndarray] = []
+        feas_all: list[bool] = []
+        for row in rows:
+            feats = np.asarray(row["features"], dtype=np.float64)
+            feasible = bool(row["feasible"])
+            X_all.append(feats)
+            feas_all.append(feasible)
+            if feasible:
+                if row["utility"] is None:
+                    raise ValueError(
+                        "feasible trial-history row carries no utility "
+                        f"(corrupt or hand-edited log): {row!r}")
+                X_feas.append(feats)
+                y_feas.append(float(row["utility"]))
+                if mean_fn is not None:
+                    hw_feas.append(hw_from_tuple(row["hw"]))
+        prior = {"X_feas": X_feas, "y_feas": y_feas,
+                 "X_all": X_all, "feas_all": feas_all}
+        if mean_fn is not None:
+            prior["m_feas"] = ([float(v) for v in np.asarray(mean_fn(hw_feas))]
+                               if hw_feas else [])
+        return prior
+
+    def _log_trial(self, hw: HardwareConfig, utility: float | None,
+                   feasible: bool) -> None:
+        """Record one finished TRUE outer evaluation into the trial log
+        (bound-gate-censored probes never reach here: their utilities are
+        bound certificates, not measurements)."""
+        if self._trial_log is None:
+            return
+        self._trial_log({
+            "hw": list(dataclasses.astuple(hw)),
+            "features": [float(v) for v in self.space.features(hw)],
+            "utility": None if utility is None else float(utility),
+            "feasible": bool(feasible),
+        })
 
     def _eval_hw(self, hw: HardwareConfig):
         engine, best, cfg = self.engine, self.best, self.engine.config
@@ -664,6 +760,7 @@ class SearchSession:
         for layer in engine._layers:
             m, edp = engine.cache.get((hw, layer), (None, float("inf")))
             if m is None:
+                self._log_trial(hw, None, False)
                 return None, False  # unknown constraint: no feasible mapping
             total_edp += edp
             maps[layer.name] = m
@@ -674,7 +771,9 @@ class SearchSession:
             print(f"  hw {hw.pe_mesh_x}x{hw.pe_mesh_y} "
                   f"lb=({hw.lb_input},{hw.lb_weight},{hw.lb_output}) "
                   f"-> model EDP {total_edp:.3e}")
-        return -float(np.log10(total_edp)), True
+        utility = -float(np.log10(total_edp))
+        self._log_trial(hw, utility, True)
+        return utility, True
 
     @property
     def done(self) -> bool:
@@ -733,6 +832,7 @@ class SearchSession:
         stats["cache_misses"] = engine.cache.misses - m0
         stats["cache_evictions"] = engine.cache.evictions - e0
         stats["cache_size"] = len(engine.cache)
+        stats["prior_rows"] = self.n_prior
         feat = counters_snapshot()
         for key in ("hw_feat", "sw_feat", "sw_fwd"):
             for kind in ("hits", "misses"):
@@ -765,6 +865,7 @@ class SearchSession:
         config + layers) session.  The incumbent dict is updated in place --
         the gate/prune/eval closures hold a reference to it."""
         self.loop.restore(snap["loop"])
+        self.n_prior = self.loop.n_prior
         self.best.update(snap["best"])
         self.engine.stats = dict(snap["stats"])
         self.engine._speculated = set(snap["speculated"])

@@ -14,7 +14,8 @@ from repro.parallel.executor import (InlineExecutor, ProcessExecutor,
                                      make_executor)
 from repro.service.scheduler import (CodesignService, ServiceRequest,
                                      ServiceResponse)
-from repro.service.store import DesignStore, design_key
+from repro.service.store import (DesignStore, TrialHistory, design_key,
+                                 history_key)
 from repro.workloads.portfolio import PortfolioConfig
 
 __all__ = [
@@ -27,6 +28,8 @@ __all__ = [
     "ServiceConfig",
     "ServiceRequest",
     "ServiceResponse",
+    "TrialHistory",
     "design_key",
+    "history_key",
     "make_executor",
 ]

@@ -48,11 +48,15 @@ import dataclasses
 import json
 import time
 
+import numpy as np
+
 from repro.core.bo import FanoutSearchSpec
 from repro.core.config import CodesignConfig, ServiceConfig
 from repro.core.nested import CodesignEngine, CoDesignResult, SearchSession
 from repro.parallel.executor import make_executor
-from repro.service.store import DesignStore, design_key
+from repro.service.store import (DesignStore, TrialHistory, design_key,
+                                 history_key)
+from repro.timeloop.model import evaluate
 from repro.timeloop.workloads import ConvLayer
 from repro.workloads.portfolio import (PortfolioConfig, PortfolioSession,
                                        make_portfolio_engine)
@@ -176,6 +180,13 @@ class _Slot:
         self.store_hits = 0
         self.store_misses = 0
         self.waiting: set[str] = set()
+        # Cross-run transfer accounting: whether this request opted into
+        # warm starts (hw.warm_start), how many approximate store hits
+        # seeded its inner searches, and how many history rows its outer GP
+        # consumed.
+        self.warm_start = False
+        self.warm_hits = 0
+        self.prior_rows = 0
 
 
 class CodesignService:
@@ -191,6 +202,17 @@ class CodesignService:
         if store is None and self.config.store_dir is not None:
             store = DesignStore(self.config.store_dir)
         self.store = store
+        # Cross-run trial history (`ServiceConfig.history_dir`): every
+        # non-portfolio request logs its finished outer trials here, and
+        # requests with `hw.warm_start` replay the matching workload set's
+        # rows into their outer GP.
+        self.history = (TrialHistory(self.config.history_dir)
+                        if self.config.history_dir is not None else None)
+        # design_key -> (mapping, edp): approximate-store-hit warm starts
+        # resolved this tick, consumed at collect time by warm_start slots
+        # (the stored entry stays the PURE search result -- a store hit must
+        # remain an exact replay for every other consumer).
+        self._warm: dict[str, tuple] = {}
         # The executor every fused dispatch runs on: injected (shared pools
         # amortize worker start-up across services) or built from
         # `ServiceConfig.executor` and owned -- `close()` shuts an owned
@@ -264,10 +286,43 @@ class CodesignService:
             if req.portfolio is not None:
                 engine = make_portfolio_engine(cfg, executor=self.executor)
                 session = PortfolioSession(engine, req.portfolio)
+                slot = _Slot(req, engine, session)
             else:
                 engine = CodesignEngine(cfg, executor=self.executor)
-                session = engine.session(req.layers)
-            self._slots.append(_Slot(req, engine, session))
+                prior = trial_log = None
+                if self.history is not None:
+                    # Always log (cold runs feed future warm ones); only
+                    # consume when the request opted in.
+                    hkey = history_key(req.layers, cfg.hw, cfg.sw, cfg.engine)
+                    trial_log = (lambda row, _hk=hkey:
+                                 self.history.append(_hk, row))
+                    if cfg.hw.warm_start:
+                        prior = self.history.load(
+                            hkey, max_rows=cfg.hw.warm_start_rows)
+                session = engine.session(req.layers, prior=prior or None,
+                                         trial_log=trial_log)
+                slot = _Slot(req, engine, session)
+                slot.warm_start = cfg.hw.warm_start
+                slot.prior_rows = len(prior) if prior else 0
+            self._slots.append(slot)
+
+    def _transplant(self, slot: _Slot, item: tuple):
+        """Approximate store hit for one (hw, layer) search: the nearest
+        stored hardware point's best mapping for the same layer, re-evaluated
+        through the true model ON THE TARGET hardware.  Returns an exact
+        `(mapping, edp)` cache entry (or None: no neighbor, or its mapping is
+        invalid here) -- never a replayed neighbor result, so everything this
+        serves carries an exact EDP."""
+        hw, layer = item
+        near = self.store.nearest(hw, layer)
+        if near is None:
+            return None
+        _, mapping, _ = near
+        ev = evaluate(hw, mapping, layer)
+        if not np.isfinite(ev.edp):
+            return None  # neighbor's mapping doesn't even fit this hardware
+        slot.warm_hits += 1
+        return (mapping, float(ev.edp))
 
     def _fuse_key(self, slot: _Slot):
         """Requests may share one stacked dispatch iff every knob their inner
@@ -309,6 +364,13 @@ class CodesignService:
                         slot.engine.cache[item] = entry
                         continue
                     slot.store_misses += 1
+                    if slot.warm_start:
+                        # Approximate hit: a close stored hardware point's
+                        # mapping, re-evaluated exactly on THIS hardware,
+                        # competes with the search result at collect time.
+                        warm = self._transplant(slot, item)
+                        if warm is not None:
+                            self._warm[key] = warm
                 self._owners[key] = [(slot, item)]
                 slot.waiting.add(key)
                 fk = (self._fuse_key(slot) if self.config.fuse
@@ -347,12 +409,21 @@ class CodesignService:
             all(s.waiting for s in self._slots)
         for jid, entries in self.executor.ready(block=block):
             g = self._inflight.pop(jid)
-            for key, entry in zip(g["keys"], entries):
-                for slot, item in self._owners.pop(key):
-                    slot.engine.cache[item] = entry
+            for key, item, entry in zip(g["keys"], g["items"], entries):
+                # A transplanted warm start competes with the search result
+                # per warm-started owner (both EDPs are exact, so best-of is
+                # never worse); the store always receives the PURE search
+                # entry -- a store hit stays an exact replay of the search.
+                warm = self._warm.pop(key, None)
+                for slot, s_item in self._owners.pop(key):
+                    e = entry
+                    if warm is not None and slot.warm_start \
+                            and warm[1] < entry[1]:
+                        e = warm
+                    slot.engine.cache[s_item] = e
                     slot.waiting.discard(key)
                 if self.store is not None:
-                    self.store.put(key, entry)
+                    self.store.put(key, entry, hw=item[0], layer=item[1])
 
         # Advance every session whose results resolved one outer stage;
         # sessions with work still in flight stay parked.  Retire completed
@@ -374,6 +445,8 @@ class CodesignService:
         result = slot.session.result()
         result.stats.update(store_hits=slot.store_hits,
                             store_misses=slot.store_misses,
+                            warm_hits=slot.warm_hits,
+                            prior_rows=slot.prior_rows,
                             latency_s=latency, ticks=slot.ticks)
         if self.store is not None and self.config.store_max_entries:
             # Disk-footprint bound for long-lived services: evict oldest

@@ -22,6 +22,18 @@ Writes reuse the `repro.checkpoint` atomic pattern -- serialize to a
 temporary file in the destination directory, then `os.replace` -- so readers
 never observe a torn entry and concurrent writers of the same key are safe
 (last writer wins with identical bytes; keys are content-addressed).
+
+Two cross-run *transfer* surfaces live alongside the exact store:
+
+  `DesignStore.nearest`   approximate hits -- when an exact key misses, the
+                          closest stored hardware point's mapping (same
+                          layer, feature-space distance) can seed the new
+                          search as a warm-start incumbent.  Never a replay:
+                          callers re-evaluate the mapping on the target
+                          hardware, so served EDPs stay exact.
+  `TrialHistory`          per-workload-set append-only log of finished outer
+                          trials (`history_key`), replayed as prior
+                          observations into a warm-started outer GP.
 """
 
 from __future__ import annotations
@@ -31,11 +43,28 @@ import hashlib
 import json
 import os
 import tempfile
+from typing import Sequence
 
-from repro.core.config import EngineConfig, SWSearchConfig
-from repro.timeloop.arch import HardwareConfig
+import numpy as np
+
+from repro.core.config import (EngineConfig, HWSearchConfig, SWSearchConfig)
+from repro.timeloop.arch import HardwareConfig, hw_from_tuple
 from repro.timeloop.mapping import Mapping
 from repro.timeloop.workloads import ConvLayer
+
+# Lazily built throwaway HardwareSpace for `DesignStore.nearest`'s feature
+# distance (features() is a pure function of the config; the space instance
+# only exists to reuse the one featurization definition).
+_FEAT_SPACE = None
+
+
+def _hw_features(hw: HardwareConfig) -> np.ndarray:
+    from repro.core.hwspace import HardwareSpace
+
+    global _FEAT_SPACE
+    if _FEAT_SPACE is None:
+        _FEAT_SPACE = HardwareSpace()
+    return _FEAT_SPACE.features(hw)
 
 
 def design_key(hw: HardwareConfig, layer: ConvLayer,
@@ -101,24 +130,51 @@ class DesignStore:
         os.makedirs(directory, exist_ok=True)
         self.hits = 0
         self.misses = 0
+        # (layer astuple) -> [(features, hw astuple, mapping, edp), ...]:
+        # the approximate-hit index over stored *feasible* entries carrying
+        # hw/layer metadata.  Built lazily on the first `nearest()` call and
+        # kept current by `put`; None until then.
+        self._nn: dict[tuple, list] | None = None
 
     def _path(self, key: str) -> str:
         return os.path.join(self.directory, key[:2], key + ".json")
 
     def get(self, key: str) -> tuple[Mapping | None, float] | None:
+        path = self._path(key)
         try:
-            with open(self._path(key)) as f:
+            with open(path) as f:
                 doc = json.load(f)
-        except (FileNotFoundError, json.JSONDecodeError):
+            entry = _decode_entry(doc)
+        except FileNotFoundError:
             self.misses += 1
             return None
+        except (json.JSONDecodeError, KeyError, TypeError, ValueError):
+            # Corrupt or schema-invalid entry (torn write survived a crash,
+            # foreign file, old incompatible layout): a miss, and the file is
+            # removed so it does not cost a failed parse on every future get
+            # -- evicting is result-preserving (the search re-runs exactly).
+            self.misses += 1
+            try:
+                os.unlink(path)
+            except OSError:
+                pass
+            return None
         self.hits += 1
-        return _decode_entry(doc)
+        return entry
 
-    def put(self, key: str, entry: tuple[Mapping | None, float]) -> None:
+    def put(self, key: str, entry: tuple[Mapping | None, float], *,
+            hw: HardwareConfig | None = None,
+            layer: ConvLayer | None = None) -> None:
         path = self._path(key)
         directory = os.path.dirname(path)
         os.makedirs(directory, exist_ok=True)
+        doc = _encode_entry(entry)
+        if hw is not None and layer is not None:
+            # Optional provenance metadata: which (hw, layer) produced this
+            # entry.  `_decode_entry` ignores it (exact gets are unchanged);
+            # `nearest` indexes on it for approximate warm-start hits.
+            doc["hw"] = list(dataclasses.astuple(hw))
+            doc["layer"] = list(dataclasses.astuple(layer))
         # Atomic publish (the checkpoint/ idiom): write a unique temp file in
         # the destination directory, then rename over the final name --
         # readers never see a torn entry, concurrent same-key writers race
@@ -126,7 +182,7 @@ class DesignStore:
         fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
         try:
             with os.fdopen(fd, "w") as f:
-                json.dump(_encode_entry(entry), f)
+                json.dump(doc, f)
             os.replace(tmp, path)
         except BaseException:
             try:
@@ -134,6 +190,68 @@ class DesignStore:
             except OSError:
                 pass
             raise
+        if self._nn is not None and hw is not None and layer is not None \
+                and entry[0] is not None:
+            self._nn.setdefault(dataclasses.astuple(layer), []).append(
+                (_hw_features(hw), dataclasses.astuple(hw),
+                 entry[0], float(entry[1])))
+
+    # --- approximate (near-identical hardware) lookup ----------------------------
+
+    def _build_nn_index(self, max_scan: int) -> None:
+        self._nn = {}
+        scanned = 0
+        paths = []
+        for root, _, files in os.walk(self.directory):
+            paths.extend(os.path.join(root, name) for name in files
+                         if name.endswith(".json"))
+        # Deterministic index regardless of directory-walk order; the scan
+        # bound keeps index construction O(max_scan) on huge stores.
+        for path in sorted(paths):
+            if scanned >= max_scan:
+                break
+            scanned += 1
+            try:
+                with open(path) as f:
+                    doc = json.load(f)
+                if "hw" not in doc or "layer" not in doc:
+                    continue  # pre-metadata entry: exact-only
+                mapping, edp = _decode_entry(doc)
+                if mapping is None:
+                    continue  # infeasible entries never serve as warm starts
+                hw_t = tuple(tuple(v) if isinstance(v, list) else v
+                             for v in doc["hw"])
+                layer_t = tuple(doc["layer"])
+                feats = _hw_features(hw_from_tuple(hw_t))
+            except (OSError, json.JSONDecodeError, KeyError, TypeError,
+                    ValueError):
+                continue
+            self._nn.setdefault(layer_t, []).append(
+                (feats, hw_t, mapping, float(edp)))
+
+    def nearest(self, hw: HardwareConfig, layer: ConvLayer, *,
+                max_scan: int = 4096
+                ) -> tuple[HardwareConfig, Mapping, float] | None:
+        """Closest stored feasible entry for this exact layer, by Euclidean
+        distance in the hardware feature space (`HardwareSpace.features`):
+        `(neighbor hw, its best mapping, its edp ON THE NEIGHBOR)` or None.
+
+        This is the approximate sibling of `get`: the caller must treat the
+        mapping as a warm-start *candidate* and re-evaluate it on the target
+        hardware (the returned edp belongs to the neighbor's hardware, never
+        the target's) -- results stay exact, only the search gets a head
+        start.  The index scans at most `max_scan` entry files once, then
+        stays current incrementally through `put`."""
+        if self._nn is None:
+            self._build_nn_index(max_scan)
+        rows = self._nn.get(dataclasses.astuple(layer))
+        if not rows:
+            return None
+        target = _hw_features(hw)
+        d2 = np.array([float(np.sum((feats - target) ** 2))
+                       for feats, _, _, _ in rows])
+        feats, hw_t, mapping, edp = rows[int(np.argmin(d2))]
+        return hw_from_tuple(hw_t), mapping, edp
 
     def __len__(self) -> int:
         n = 0
@@ -185,7 +303,10 @@ class DesignStore:
                 or max_entries < 0:
             raise ValueError(
                 f"max_entries must be an int >= 0, got {max_entries!r}")
-        entries = sorted(self._entries())
+        # Sort on (mtime, path) exactly as documented: a plain sort of the
+        # (mtime, size, path) triples would tiebreak equal mtimes on SIZE
+        # before path, making eviction order depend on entry byte counts.
+        entries = sorted(self._entries(), key=lambda e: (e[0], e[2]))
         removed = 0
         for _, _, path in entries[:max(0, len(entries) - max_entries)]:
             try:
@@ -193,4 +314,98 @@ class DesignStore:
                 removed += 1
             except FileNotFoundError:
                 pass
+        self._nn = None  # pruned entries must leave the approximate index
         return removed
+
+
+# --- cross-run trial history (outer-GP warm starts) ------------------------------
+
+
+def history_key(layers: Sequence[ConvLayer], hw_cfg: HWSearchConfig,
+                sw_cfg: SWSearchConfig, engine_cfg: EngineConfig) -> str:
+    """Stable content hash identifying one *workload set's* outer-search
+    problem: the layers, the hardware-space parameterization (num_pes), the
+    inner-search config, and the engine fields that determine inner results
+    (same set `design_key` hashes).
+
+    Deliberately EXCLUDED: the run seed, the outer budget/acquisition knobs,
+    prune/spec_k/elite_k/strategy, and every `warm_start*` field -- those
+    change which hardware points get probed, not what a probe's
+    `(features, utility, feasible)` row means, so cold runs under any of
+    them write history that warm runs under any of them can consume."""
+    eng = (engine_cfg.resolve_backend(), engine_cfg.gp_refit_every,
+           engine_cfg.batched, engine_cfg.pallas_mode)
+    data = repr((tuple(dataclasses.astuple(layer) for layer in layers),
+                 int(hw_cfg.num_pes), dataclasses.astuple(sw_cfg),
+                 eng)).encode()
+    return hashlib.blake2s(data, digest_size=16).hexdigest()
+
+
+class TrialHistory:
+    """Append-only per-workload-set log of finished outer trials.
+
+    One JSONL file per `history_key`, fanned out like the store
+    (`<dir>/ab/ab...90.jsonl`); each line is one TRUE outer evaluation:
+
+        {"hw": [astuple], "features": [11 floats],
+         "utility": float | null, "feasible": bool}
+
+    (bound-gate-censored trials are never logged -- their utilities are
+    certificates, not measurements).  `append` publishes each row as ONE
+    `os.write` on an `O_APPEND` descriptor, which POSIX keeps atomic for
+    concurrent writers -- many service processes may log into one history
+    directory; `load` skips any torn or foreign line instead of failing."""
+
+    def __init__(self, directory: str):
+        self.directory = directory
+        os.makedirs(directory, exist_ok=True)
+        self.appended = 0
+
+    def _path(self, hkey: str) -> str:
+        return os.path.join(self.directory, hkey[:2], hkey + ".jsonl")
+
+    def append(self, hkey: str, row: dict) -> None:
+        path = self._path(hkey)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        line = (json.dumps(row, sort_keys=True) + "\n").encode()
+        fd = os.open(path, os.O_WRONLY | os.O_CREAT | os.O_APPEND, 0o644)
+        try:
+            os.write(fd, line)
+        finally:
+            os.close(fd)
+        self.appended += 1
+
+    def load(self, hkey: str, max_rows: int = 0) -> list[dict]:
+        """Rows for one history key, oldest first; `max_rows` > 0 keeps only
+        the most recent.  Schema-invalid or torn lines are skipped (a
+        concurrent writer's partial line must not poison every reader)."""
+        try:
+            with open(self._path(hkey), "rb") as f:
+                data = f.read()
+        except FileNotFoundError:
+            return []
+        rows: list[dict] = []
+        for line in data.splitlines():
+            if not line.strip():
+                continue
+            try:
+                doc = json.loads(line)
+                util = doc["utility"]
+                rows.append({
+                    "hw": tuple(tuple(v) if isinstance(v, list) else v
+                                for v in doc["hw"]),
+                    "features": [float(v) for v in doc["features"]],
+                    "utility": None if util is None else float(util),
+                    "feasible": bool(doc["feasible"]),
+                })
+            except (json.JSONDecodeError, KeyError, TypeError, ValueError):
+                continue
+        if max_rows and len(rows) > max_rows:
+            rows = rows[-max_rows:]
+        return rows
+
+    def __len__(self) -> int:
+        n = 0
+        for _, _, files in os.walk(self.directory):
+            n += sum(1 for f in files if f.endswith(".jsonl"))
+        return n

@@ -68,6 +68,14 @@ class HardwareConfig:
         return self.energy.gb * (width ** 0.5) / width
 
 
+def hw_from_tuple(t) -> HardwareConfig:
+    """Rebuild a `HardwareConfig` from its `dataclasses.astuple` image (the
+    wire form persisted by `repro.service.store`).  The last field is the
+    nested `EnergyTable`, which `astuple` recurses into -- a naive
+    `HardwareConfig(*t)` would hand the energy slot a plain tuple."""
+    return HardwareConfig(*t[:-1], energy=EnergyTable(*t[-1]))
+
+
 def hw_is_valid(hw: HardwareConfig) -> tuple[bool, str]:
     """Known (input) hardware constraints from appendix Fig. 7."""
     if hw.pe_mesh_x * hw.pe_mesh_y != hw.num_pes:
